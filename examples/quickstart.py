@@ -1,0 +1,46 @@
+"""Quickstart: the paper's aggregation on the GAS engine in 60 seconds.
+
+Builds a small power-law graph, runs GCN feature aggregation through the
+FAST-GAS Pallas kernel (CAM-match + row-parallel update, interpret mode on
+CPU), then BFS/SSSP/CC on the same engine, and prints the cost-model headline
+numbers (50× loading cut, 3.6×/2.4× speedups).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.core import cost_model as cm
+from repro.graph import rmat
+
+g = rmat(10, 8, seed=0, weights=True)
+print(f"graph: {g.n_vertices} vertices, {g.n_edges} edges (R-MAT)")
+
+feats = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((g.n_vertices, 16)).astype(np.float32))
+src, dst, w = jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(g.weights)
+
+# aggregation (the paper's Fig 12) through the FAST-GAS kernel
+agg = alg.feature_embedding(src, dst, w, feats, impl="pallas")
+ref = alg.feature_embedding(src, dst, w, feats, impl="xla")
+print(f"GAS kernel aggregation: out {agg.shape}, "
+      f"max|err| vs oracle = {float(jnp.max(jnp.abs(agg - ref))):.2e}")
+
+# classic algorithms on the same find-and-compute loop (paper §3.4)
+levels = alg.bfs(src, dst, g.n_vertices, 0)
+dist = alg.sssp(src, dst, w, g.n_vertices, 0)
+comps = alg.connected_components(src, dst, g.n_vertices)
+print(f"BFS: reached {int(jnp.isfinite(levels).sum())} vertices, "
+      f"max level {int(levels[jnp.isfinite(levels)].max())}")
+print(f"SSSP: mean finite distance {float(dist[jnp.isfinite(dist)].mean()):.3f}")
+print(f"CC: {len(np.unique(np.asarray(comps)))} components")
+
+# the paper's headline numbers from the calibrated cost model
+rows = cm.fig15_table()
+print(f"\nCGTrans vs GCNAX (cost model, Table II datasets):")
+for r in rows:
+    print(f"  {r['dataset']:10s} SSD-loading cut {r['load_reduction']:.0f}x, "
+          f"speedup {r['speedup_vs_gcnax']:.2f}x vs GCNAX, "
+          f"{r['speedup_vs_insider']:.2f}x vs Insider")

@@ -1,0 +1,14 @@
+"""Serve a small LM with batched requests: prefill + greedy decode.
+
+Demonstrates the serving path (KV caches incl. ring buffers for local-attn
+layers, gemma-style softcaps) on a reduced gemma2-family model.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+sys.exit(serve.main(["--arch", "gemma2-2b", "--reduced",
+                     "--batch", "4", "--prompt-len", "48", "--gen", "24"]))

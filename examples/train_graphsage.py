@@ -1,0 +1,106 @@
+"""End-to-end driver (the paper's workload): distributed GraphSAGE training
+with the CGTrans dataflow on an 8-shard storage mesh.
+
+Features live owner-sharded on the mesh (never shipped raw); batches carry
+only vertex ids; layer-1 aggregation happens at the owner shards and only the
+compressed partials cross the interconnect. Full production loop: AdamW +
+cosine, checkpointing + resume, straggler monitor, preemption guard.
+
+    PYTHONPATH=src python examples/train_graphsage.py --steps 300
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.common.config import TrainConfig
+from repro.common.schema import count_params, init_params
+from repro.core.gcn import GCNConfig, gcn_schema, sage_loss
+from repro.data import GraphBatchStream, synthetic_node_labels
+from repro.graph import partition_by_src, rmat
+from repro.launch.mesh import make_data_mesh
+from repro.optim import adamw_init, adamw_update
+from repro.runtime import PreemptionGuard, StepMonitor
+from repro.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--scale", type=int, default=14,
+                    help="R-MAT scale (2^scale vertices)")
+    ap.add_argument("--features", type=int, default=64)
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--fanout", type=int, default=10)
+    ap.add_argument("--batch-per-part", type=int, default=64)
+    ap.add_argument("--dataflow", choices=["cgtrans", "baseline"],
+                    default="cgtrans")
+    ap.add_argument("--ckpt-dir", default="/tmp/graphsage_ckpt")
+    args = ap.parse_args()
+
+    mesh = make_data_mesh(8)
+    print(f"mesh: {mesh.shape} (storage tier = 'data' axis)")
+
+    g = rmat(args.scale, 16, seed=0)
+    rng = np.random.default_rng(1)
+    g.features = rng.standard_normal(
+        (g.n_vertices, args.features)).astype(np.float32)
+    labels = synthetic_node_labels(g.features, 16)
+    pg = partition_by_src(g, 8)
+    feats = jax.device_put(
+        jnp.asarray(pg.features),
+        jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data")))
+    print(f"graph: {g.n_vertices} vertices, {g.n_edges} edges; "
+          f"features owner-sharded {pg.features.shape} over 8 shards")
+
+    cfg = GCNConfig(n_features=args.features, hidden=args.hidden, n_classes=16,
+                    fanout=args.fanout, dataflow=args.dataflow)
+    tc = TrainConfig(learning_rate=3e-3, warmup_steps=20,
+                     total_steps=args.steps, weight_decay=0.01)
+    params = init_params(gcn_schema(cfg), jax.random.PRNGKey(0))
+    print(f"model: {count_params(gcn_schema(cfg)) / 1e6:.2f}M params "
+          f"(+{feats.size / 1e6:.1f}M feature table on the storage tier), "
+          f"dataflow={args.dataflow}")
+
+    stream = GraphBatchStream(g, labels, n_parts=8,
+                              batch_per_part=args.batch_per_part,
+                              k1=args.fanout, k2=args.fanout)
+
+    @jax.jit
+    def step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: sage_loss(p, feats, batch, cfg, mesh=mesh),
+            has_aux=True)(state["params"])
+        new_p, new_opt, om = adamw_update(state["params"], grads, state["opt"], tc)
+        return ({"params": new_p, "opt": new_opt, "step": state["step"] + 1},
+                {**metrics, **om, "total_loss": loss})
+
+    state = {"params": params, "opt": adamw_init(params, tc),
+             "step": jnp.zeros((), jnp.int32)}
+
+    def batches():
+        for b in stream:
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    state, n = train_loop(
+        step_fn=step, state=state, batches=batches(),
+        total_steps=args.steps,
+        ckpt=CheckpointManager(args.ckpt_dir, keep=2), ckpt_every=100,
+        monitor=StepMonitor(), guard=PreemptionGuard(), log_every=20)
+
+    # final eval on a fresh batch
+    b = {k: jnp.asarray(v) for k, v in stream.batch_at(10_000).items()}
+    _, m = sage_loss(state["params"], feats, b, cfg, mesh=mesh)
+    print(f"done at step {n}: eval loss {float(m['loss']):.4f} "
+          f"acc {float(m['acc']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Train a reduced-config LM end-to-end with the fault-tolerant loop
+(checkpoint every 25 steps, resumable, straggler monitor, preemption guard).
+
+    PYTHONPATH=src python examples/train_lm.py --arch mamba2-780m --steps 60
+"""
+
+import argparse
+import sys
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    return train.main(["--arch", args.arch, "--reduced",
+                       "--steps", str(args.steps),
+                       "--ckpt-dir", "/tmp/lm_ckpt"])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

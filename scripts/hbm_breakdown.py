@@ -1,0 +1,75 @@
+"""Per-op HBM/collective traffic breakdown for one dry-run cell (the §Perf
+profiling tool — 'the profile' on a CPU host is the lowered HLO).
+
+    PYTHONPATH=src python scripts/hbm_breakdown.py <arch> <shape> [hbm|coll]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import collections
+import re
+import sys
+
+import jax
+
+from repro import configs
+from repro.launch.specs import build_case
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis as H
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    mode = sys.argv[3] if len(sys.argv) > 3 else "hbm"
+    mesh = make_production_mesh()
+    cfg = configs.get_config(arch)
+    case = build_case(cfg, configs.get_shape(shape), mesh)
+    with mesh:
+        comp = jax.jit(case.fn, in_shardings=case.in_shardings,
+                       out_shardings=case.out_shardings,
+                       donate_argnums=case.donate).lower(*case.arg_structs).compile()
+    comps, entry = H.parse_hlo(comp.as_text())
+    mult = H.multiplicities(comps, entry)
+    table = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            table[ins.name] = (ins.result_bytes, ins.result_is_tuple, ins.result_dims)
+
+    def opsum(ins):
+        return sum(table.get(o, (0.0, True, []))[0] for o in ins.operands
+                   if not table.get(o, (0.0, True, []))[1])
+
+    rows = collections.Counter()
+    for name, c in comps.items():
+        m = mult.get(name, 0)
+        if m <= 0:
+            continue
+        for ins in c.instrs:
+            is_coll = any(ins.opcode.startswith(k) for k in H._COLLECTIVES)
+            if mode == "coll" and not is_coll:
+                continue
+            if mode == "hbm" and (is_coll or ins.opcode not in H._TRAFFIC_OPS):
+                continue
+            os_ = opsum(ins)
+            if ins.opcode == "dynamic-slice":
+                b = 2 * ins.result_bytes
+            elif ins.opcode == "dynamic-update-slice" or (
+                    ins.opcode == "fusion" and "dynamic_update_slice" in ins.attrs):
+                mx = max([table.get(o, (0.0, True, []))[0]
+                          for o in ins.operands
+                          if not table.get(o, (0.0, True, []))[1]] or [0.0])
+                b = 2 * max(os_ - mx, 0.0)
+            elif is_coll:
+                b = max(ins.result_bytes, os_)
+            else:
+                b = ins.result_bytes + os_
+            om = re.search(r'op_name="([^"]*)"', ins.attrs)
+            rows[(ins.opcode, om.group(1)[-75:] if om else ins.name)] += m * b
+    total = sum(rows.values())
+    print(f"total {mode}: {total / 1e12:.2f} TB/device")
+    for (op, o), b in rows.most_common(18):
+        print(f"{b / 1e12:7.2f} TB ({100 * b / total:4.1f}%) {op:20s} {o}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Dev sanity: tiny config per family — loss, grad, prefill+decode consistency."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.common.schema import init_params, param_structs
+from repro.models import transformer as T
+
+FAMS = {
+    "dense": dict(pattern=("attn",), qkv_bias=True),
+    "gemma": dict(pattern=("local", "attn"), window=8, attn_logit_softcap=50.0,
+                  final_logit_softcap=30.0, post_norms=True, rms_zero_centered=True,
+                  embed_scale=True, qk_norm=True, query_pre_attn_scalar=16.0,
+                  rope_theta_global=1e6),
+    "moe": dict(pattern=("moe",), first_k_dense=1, n_experts=8, top_k=2,
+                n_shared_experts=2, d_ff_dense=96),
+    "ssm": dict(pattern=("ssd",), ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+                ssm_expand=2),
+    "hybrid": dict(pattern=("rglru", "rglru", "local"), window=8, lru_width=48),
+    "audio": dict(pattern=("dec",), is_encoder_decoder=True, n_enc_layers=2,
+                  enc_seq=12, norm_type="ln", mlp_gated=False, mlp_bias=True,
+                  act="gelu", tie_embeddings=True),
+    "vlm": dict(pattern=("attn", "attn", "cross"), vision_seq=10),
+}
+
+B, S, V = 2, 16, 64
+ok = True
+for fam, kw in FAMS.items():
+    cfg = ModelConfig(name=f"tiny-{fam}", family=fam, n_layers=6 if fam != "audio" else 2,
+                      d_model=48, n_heads=4, n_kv_heads=2, d_ff=96, vocab=V,
+                      head_dim=12, param_dtype="float32", compute_dtype="float32",
+                      remat="none", **kw)
+    cfg.validate()
+    key = jax.random.PRNGKey(0)
+    schema = T.model_schema(cfg, max_seq=S)
+    params = init_params(schema, key)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, V),
+             "labels": jax.random.randint(key, (B, S), 0, V)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model))
+    if cfg.vision_seq:
+        batch["vision"] = jax.random.normal(key, (B, cfg.vision_seq, cfg.d_model))
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: T.loss_fn(p, batch, cfg), has_aux=True)(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(g**2) for g in jax.tree.leaves(grads)))
+    bad = (not np.isfinite(float(loss))) or (not np.isfinite(float(gnorm)))
+
+    # prefill + decode consistency: prefill S-1 tokens, decode token S-1,
+    # compare against prefill of all S tokens' last logits
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :S - 1]
+    logits_a, caches = T.prefill(params, pre_batch, cfg, cache_len=S)
+    logits_b, _ = T.decode_step(params, batch["tokens"][:, S - 1:S], caches,
+                                jnp.array(S - 1, jnp.int32), cfg)
+    logits_full, _ = T.prefill(params, batch, cfg, cache_len=S)
+    err = float(jnp.max(jnp.abs(logits_b - logits_full)))
+    bad |= err > 2e-2 or not np.isfinite(err)
+    print(f"{fam:8s} loss={float(loss):7.4f} gnorm={float(gnorm):9.3f} "
+          f"decode_err={err:.2e} {'FAIL' if bad else 'ok'}")
+    ok &= not bad
+
+sys.exit(0 if ok else 1)

@@ -1,0 +1,3 @@
+"""repro: GRAPHIC/CGTrans (Chen et al., 2022) on a TPU-native JAX stack."""
+
+__version__ = "1.0.0"

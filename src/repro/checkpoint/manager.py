@@ -1,0 +1,133 @@
+"""Checkpointing: atomic, async, elastic.
+
+Layout:  <dir>/step_<N>/  arrays.npz (flattened leaves) + manifest.json
+(treedef paths, shapes, dtypes, step). Commit protocol: write into
+``.tmp_step_<N>``, fsync, atomic rename — a crash mid-save never corrupts the
+latest checkpoint. Retention keeps the newest K.
+
+Elastic restore: leaves are stored UNSHARDED (gathered); on restore they are
+``jax.device_put`` with NamedShardings resolved against the *current* mesh —
+a checkpoint written on (16,16) restores onto (2,16,16), (4,), or 1 device
+unchanged (logical specs are mesh-agnostic; see repro.common.logical).
+
+Async: ``save_async`` snapshots to host memory synchronously (cheap) and
+writes in a daemon thread; ``wait()`` joins before the next save or exit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # --- write ---------------------------------------------------------
+
+    def save(self, state, step: int) -> str:
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        return self._write(host_state, step)
+
+    def save_async(self, state, step: int) -> None:
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self._thread = threading.Thread(
+            target=self._write, args=(host_state, step), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, host_state, step: int) -> str:
+        tmp = os.path.join(self.dir, f".tmp_step_{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves = _flatten_with_paths(host_state)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: v for k, v in leaves})
+        manifest = {
+            "step": step,
+            "leaves": [{"key": k, "shape": list(np.shape(v)),
+                        "dtype": str(np.asarray(v).dtype)} for k, v in leaves],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._retain()
+        return final
+
+    def _retain(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # --- read ----------------------------------------------------------
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.isdir(os.path.join(self.dir, name)):
+                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None, *,
+                mesh=None, spec_tree=None):
+        """Restore into the structure of ``template`` (pytree of arrays or
+        ShapeDtypeStructs). With mesh+spec_tree (logical specs), leaves are
+        placed sharded — onto whatever mesh is current (elastic)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}")
+        arrays = np.load(os.path.join(path, "arrays.npz"))
+        keys = [k for k, _ in _flatten_with_paths(template)]
+        leaves = [arrays[k] for k in keys]
+
+        if mesh is not None and spec_tree is not None:
+            from repro.common.logical import to_physical
+            from jax.sharding import NamedSharding
+            spec_leaves = jax.tree.leaves(
+                spec_tree, is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, dict))
+            placed = [
+                jax.device_put(l, NamedSharding(mesh, to_physical(s, mesh)))
+                for l, s in zip(leaves, spec_leaves)
+            ]
+        else:
+            placed = [jax.numpy.asarray(l) for l in leaves]
+        treedef = jax.tree.structure(template)
+        return jax.tree.unflatten(treedef, placed), step

@@ -1,0 +1,33 @@
+from repro.common.config import (
+    LAYER_KINDS,
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    TrainConfig,
+    reduced,
+)
+from repro.common.hw import V5E, ChipSpec
+from repro.common.logical import (
+    batch_axes,
+    dp_size,
+    named_sharding,
+    to_physical,
+    tree_to_physical,
+    tree_to_shardings,
+)
+from repro.common.schema import (
+    ParamDef,
+    count_params,
+    init_params,
+    param_logical_specs,
+    param_structs,
+    stack,
+)
+
+__all__ = [
+    "LAYER_KINDS", "ModelConfig", "ShapeConfig", "SHAPES", "TrainConfig",
+    "reduced", "V5E", "ChipSpec", "batch_axes", "dp_size", "named_sharding",
+    "to_physical", "tree_to_physical", "tree_to_shardings", "ParamDef",
+    "count_params", "init_params", "param_logical_specs", "param_structs",
+    "stack",
+]

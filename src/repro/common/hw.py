@@ -1,0 +1,34 @@
+"""Hardware constants.
+
+Two hardware models coexist in this repo:
+
+* the TPU v5e fleet the JAX system targets (roofline terms, §Roofline), and
+* the paper's SPICE/trace-calibrated GRAPHIC constants (Table I) plus the
+  storage-system constants its latency model needs — those live in
+  ``repro.core.cost_model`` next to the model that consumes them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Per-chip roofline constants (TPU v5e, per the assignment)."""
+
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12  # FLOP/s
+    hbm_bw: float = 819e9            # bytes/s
+    ici_link_bw: float = 50e9        # bytes/s per link
+    hbm_bytes: float = 16e9          # capacity (used for fits-check commentary)
+    vmem_bytes: float = 128 * 1024 * 1024 / 8  # ~16 MiB usable VMEM
+
+
+V5E = ChipSpec()
+
+# Mesh shapes required by the assignment.
+SINGLE_POD_SHAPE = (16, 16)                 # ("data", "model")
+MULTI_POD_SHAPE = (2, 16, 16)               # ("pod", "data", "model")
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD_AXES = ("pod", "data", "model")

@@ -1,0 +1,123 @@
+"""Logical→physical axis mapping (MaxText-style logical axis rules).
+
+Schemas annotate parameters/activations with *logical* axis names; a rule
+table maps each logical name to a tuple of physical mesh axes. Resolution
+drops physical axes that are absent from the current mesh, which makes the
+same schema valid on a 1-device test mesh, the (16,16) single pod and the
+(2,16,16) multi-pod — and is what makes elastic restore trivial.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxis = Optional[Union[str, Tuple[str, ...]]]
+LogicalSpec = Tuple[LogicalAxis, ...]
+
+# Default rule table. Each logical axis maps to an ordered tuple of physical
+# axes; at resolution time we keep only the ones present in the mesh.
+DEFAULT_RULES: dict = {
+    # activation axes
+    "batch": ("pod", "data"),          # DP over pod (DCN) and data (ICI)
+    "seq": (),                         # sequence replicated by default
+    "seq_shard": ("data",),            # SP: long-context sequence over data
+    "seq_kv": ("model",),              # decode KV-cache seq dim (flash-decode
+                                       # style: scores local, softmax psums tiny)
+    "act_heads": ("model",),           # activation head dim over TP
+    "act_ff": ("model",),
+    # parameter axes. Weights are 2D-sharded: the contraction/"embed" dim over
+    # "data" (ZeRO-3/FSDP — params + optimizer state divide by the FULL fleet,
+    # GSPMD inserts the per-layer weight all-gather / grad reduce-scatter) and
+    # the output dim over "model" (TP). 90B × 12 B of f32+Adam state = 4.1 GB
+    # per chip on 256 chips instead of 66 GB with TP-only sharding.
+    "embed": ("data",),                # FSDP axis of every weight matrix
+    "vocab": ("model",),               # big embedding tables over TP (CGTrans)
+    "heads": ("model",),               # attention heads over TP
+    "kv_heads": ("model",),            # GQA kv heads over TP
+    "ff": ("model",),                  # MLP hidden over TP
+    "experts": ("model",),             # EP: experts over TP axis
+    "lru": ("model",),                 # RG-LRU width over TP
+    "ssm_heads": ("model",),           # mamba2 heads over TP
+    "layers": (),                      # stacked-scan layer dim never sharded
+    # graph engine axes
+    "graph_part": ("data",),           # vertex/edge partitions = storage tier
+    "feature": ("model",),             # vertex feature dim over TP
+}
+
+
+def resolve_axis(axis: LogicalAxis, mesh_axes: Iterable[str], rules=None):
+    """Resolve one logical axis to physical mesh axes present in ``mesh_axes``."""
+    rules = rules or DEFAULT_RULES
+    if axis is None:
+        return None
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    phys: list = []
+    for name in names:
+        for p in rules.get(name, ()):  # unknown logical name → replicated
+            if p in mesh_axes and p not in phys:
+                phys.append(p)
+    if not phys:
+        return None
+    return phys[0] if len(phys) == 1 else tuple(phys)
+
+
+def to_physical(spec: LogicalSpec, mesh: Mesh, rules=None) -> P:
+    """Map a logical spec tuple to a PartitionSpec for ``mesh``.
+
+    Guards against double-use of a physical axis (illegal in GSPMD): the
+    first logical dim to claim a physical axis wins, later dims drop it.
+    """
+    mesh_axes = set(mesh.axis_names)
+    used: set = set()
+    out = []
+    for axis in spec:
+        phys = resolve_axis(axis, mesh_axes, rules)
+        if phys is None:
+            out.append(None)
+            continue
+        cand = (phys,) if isinstance(phys, str) else tuple(phys)
+        cand = tuple(a for a in cand if a not in used)
+        used.update(cand)
+        if not cand:
+            out.append(None)
+        elif len(cand) == 1:
+            out.append(cand[0])
+        else:
+            out.append(cand)
+    return P(*out)
+
+
+def named_sharding(spec: LogicalSpec, mesh: Mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, to_physical(spec, mesh, rules))
+
+
+def tree_to_physical(spec_tree, mesh: Mesh, rules=None):
+    """Map a pytree of logical specs to PartitionSpecs."""
+    return jax.tree.map(
+        lambda s: to_physical(s, mesh, rules),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, dict),
+    )
+
+
+def tree_to_shardings(spec_tree, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, to_physical(s, mesh, rules)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, dict),
+    )
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Physical axes implementing data parallelism on this mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    size = 1
+    for a in batch_axes(mesh):
+        size *= mesh.shape[a]
+    return size

@@ -1,0 +1,113 @@
+"""Parameter schemas: one declaration drives init, sharding, and dry-run.
+
+A schema is a nested dict whose leaves are :class:`ParamDef`. From it we derive
+  * ``init_params``   — real arrays (tests, examples),
+  * ``param_specs``   — logical-spec pytree → PartitionSpecs per mesh,
+  * ``param_structs`` — ShapeDtypeStructs (dry-run lowering, zero allocation),
+  * ``count_params``  — exact parameter counts for MODEL_FLOPS,
+  * ``stack``         — prepend a layers dim to every leaf (scan-stacked blocks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.logical import LogicalSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: LogicalSpec                 # one logical axis name (or None) per dim
+    init: str = "normal"                 # normal | zeros | ones | lecun | custom
+    dtype: Any = jnp.float32
+    scale: Optional[float] = None        # stddev override for "normal"
+    custom: Optional[str] = None         # tag interpreted by custom initializers
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+Schema = Dict[str, Any]  # nested dict of ParamDef
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, schema: Schema):
+    return jax.tree.map(fn, schema, is_leaf=_is_def)
+
+
+def _init_leaf(d: ParamDef, key) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "normal":
+        std = d.scale if d.scale is not None else 0.02
+        return (std * jax.random.normal(key, d.shape, jnp.float32)).astype(d.dtype)
+    if d.init == "lecun":
+        fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[0], 1)
+        std = 1.0 / math.sqrt(fan_in)
+        return (std * jax.random.normal(key, d.shape, jnp.float32)).astype(d.dtype)
+    if d.init == "custom":
+        return _custom_init(d, key)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def _custom_init(d: ParamDef, key) -> jax.Array:
+    if d.custom == "rglru_lambda":
+        # c·softplus(Λ) s.t. recurrence gate a = exp(-8·softplus(Λ)·sigmoid(r))
+        # initialised so a^c in [0.9, 0.999] (Griffin appendix).
+        u = jax.random.uniform(key, d.shape, jnp.float32, 0.9**2, 0.999**2)
+        lam = jnp.log(jnp.expm1(-jnp.log(u) / 8.0))  # inverse softplus
+        return lam.astype(d.dtype)
+    if d.custom == "ssm_a_log":
+        # mamba2: A in [1, 16] per head, stored as log.
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(d.dtype)
+    if d.custom == "ssm_dt_bias":
+        # dt bias s.t. softplus(dt_bias) in [1e-3, 1e-1].
+        u = jax.random.uniform(key, d.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+        return jnp.log(jnp.expm1(dt)).astype(d.dtype)
+    raise ValueError(f"unknown custom init {d.custom!r}")
+
+
+def init_params(schema: Schema, key) -> Dict[str, Any]:
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=_is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [_init_leaf(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_logical_specs(schema: Schema):
+    """Pytree of logical spec tuples (consumed by logical.tree_to_physical)."""
+    return tree_map_defs(lambda d: tuple(d.logical), schema)
+
+
+def param_structs(schema: Schema):
+    return tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), schema)
+
+
+def count_params(schema: Schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=_is_def)
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+def stack(schema: Schema, n: int) -> Schema:
+    """Prepend a scan (layers) dim of size ``n`` to every leaf."""
+
+    def _stack(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(
+            d, shape=(n, *d.shape), logical=("layers", *d.logical)
+        )
+
+    return tree_map_defs(_stack, schema)

@@ -1,0 +1,27 @@
+"""The paper's own workload: GraphSAGE/GCN over Table-II-scale graphs.
+
+Fan-out 50 per the paper §4.2 ("GraphSAGE samples 50 neighbors at a time
+according to the general setup"); feature widths from Table II.
+"""
+
+from repro.core.gcn import GCNConfig
+
+# Reddit-like (the paper's end-to-end Fig 16(c) dataset)
+CONFIG = GCNConfig(
+    n_features=602,
+    hidden=256,
+    n_classes=41,      # Reddit's subreddit-classification arity
+    fanout=50,
+    aggregate="add",
+    dataflow="cgtrans",
+    n_layers=2,
+)
+
+# per-dataset feature widths (Table II) for benchmarks
+TABLE_II_GCN = {
+    "Reddit": CONFIG,
+    "Movielens": GCNConfig(n_features=1000, hidden=256, n_classes=32, fanout=50),
+    "Amazon": GCNConfig(n_features=32, hidden=256, n_classes=32, fanout=50),
+    "OGBN-100M": GCNConfig(n_features=32, hidden=256, n_classes=172, fanout=50),
+    "Protein-PI": GCNConfig(n_features=512, hidden=256, n_classes=16, fanout=50),
+}

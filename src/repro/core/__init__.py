@@ -1,0 +1,15 @@
+"""The paper's primary contribution:
+
+* ``cgtrans``    — Compressive Graph Transmission dataflows (aggregate-at-
+                   owner + compressed collective vs ship-raw baseline)
+* ``gas``        — the gather-and-scatter engine primitives (CAM match +
+                   row-parallel update, idle-skip)
+* ``gcn``        — GCN / GraphSAGE models on the CGTrans substrate
+* ``algorithms`` — BFS / SSSP / CC / sort as GAS find-and-compute loops
+* ``cost_model`` — the paper's Table I/II-calibrated latency+bytes+area model
+                   (reproduces Figures 14–16)
+"""
+
+from repro.core import algorithms, cgtrans, cost_model, gas, gcn
+
+__all__ = ["algorithms", "cgtrans", "cost_model", "gas", "gcn"]

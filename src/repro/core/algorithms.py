@@ -1,0 +1,107 @@
+"""Classic graph algorithms on the GAS engine (paper §3.4, Fig 13).
+
+The paper runs BFS, SSSP, CC and sorting as find-and-compute loops on the
+CAM + FAST SRAM pair. Here each algorithm is the same loop over the GAS
+primitives (match → row-parallel reduce), with ``lax.while_loop`` as the
+fixed-point driver — fully jittable, device-resident, and validated against
+networkx oracles in tests.
+
+All take COO edge arrays and return dense per-vertex results.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.gas import gas_gather, gas_scatter
+
+INF = jnp.float32(jnp.inf)
+
+
+def sssp(src: jax.Array, dst: jax.Array, weights: jax.Array, n_vertices: int,
+         source: int, *, impl: str = "xla", max_iters: int = 0) -> jax.Array:
+    """Bellman-Ford SSSP — the paper's add-then-min GAS atom, iterated.
+
+    Each round: gather dist[src] (find), add edge weight (1-bit-ALU add),
+    scatter-min into dst rows (row-parallel min update).
+    """
+    max_iters = max_iters or n_vertices
+    dist0 = jnp.full((n_vertices,), INF).at[source].set(0.0)
+
+    def body(carry):
+        it, dist, _ = carry
+        relax = gas_gather(dist, src) + weights
+        best = gas_scatter(dst, relax, n_vertices, op="min", impl=impl)
+        new = jnp.minimum(dist, best)
+        return it + 1, new, jnp.any(new < dist)
+
+    def cond(carry):
+        it, _, changed = carry
+        return changed & (it < max_iters)
+
+    _, dist, _ = lax.while_loop(cond, body, (0, dist0, jnp.bool_(True)))
+    return dist
+
+
+def bfs(src: jax.Array, dst: jax.Array, n_vertices: int, source: int,
+        *, impl: str = "xla", max_iters: int = 0) -> jax.Array:
+    """BFS levels = SSSP with unit weights (paper deploys BFS this way)."""
+    return sssp(src, dst, jnp.ones_like(src, jnp.float32), n_vertices, source,
+                impl=impl, max_iters=max_iters)
+
+
+def connected_components(src: jax.Array, dst: jax.Array, n_vertices: int,
+                         *, impl: str = "xla", max_iters: int = 0) -> jax.Array:
+    """Min-label propagation (paper's CC: find-and-update the minimum among
+    matched rows). Edges are treated as undirected. Returns component labels
+    (the minimum vertex id of each component)."""
+    max_iters = max_iters or n_vertices
+    s = jnp.concatenate([src, dst])
+    d = jnp.concatenate([dst, src])
+    labels0 = jnp.arange(n_vertices, dtype=jnp.float32)
+
+    def body(carry):
+        it, lab, _ = carry
+        prop = gas_scatter(d, gas_gather(lab, s), n_vertices, op="min", impl=impl)
+        new = jnp.minimum(lab, prop)
+        return it + 1, new, jnp.any(new < lab)
+
+    def cond(carry):
+        it, _, changed = carry
+        return changed & (it < max_iters)
+
+    _, labels, _ = lax.while_loop(cond, body, (0, labels0, jnp.bool_(True)))
+    return labels.astype(jnp.int32)
+
+
+def gas_sort(x: jax.Array, *, impl: str = "xla") -> jax.Array:
+    """The paper's fully-concurrent insert sort, re-expressed.
+
+    FAST-GAS compares the pivot against *all* rows at once and popcounts the
+    flags with the SFU adder tree to find the pivot's rank — O(n) rounds of
+    O(1) parallel work. On TPU the all-rows compare of *all* pivots is one
+    broadcast compare (the same silicon trick, width-first):
+        rank_i = Σ_j [x_j < x_i] + Σ_j [x_j == x_i ∧ j < i]   (stable)
+    then one GAS scatter places every value at its rank row in parallel.
+    """
+    n = x.shape[0]
+    lt = (x[None, :] < x[:, None]).astype(jnp.int32)
+    eq = (x[None, :] == x[:, None]) & (jnp.arange(n)[None, :] < jnp.arange(n)[:, None])
+    rank = lt.sum(1) + eq.astype(jnp.int32).sum(1)
+    return gas_scatter(rank, x, n, op="add", impl=impl)
+
+
+def feature_embedding(src: jax.Array, dst: jax.Array, weights: jax.Array,
+                      feats: jax.Array, *, op: str = "add",
+                      impl: str = "xla") -> jax.Array:
+    """Paper Fig 12: aggregation (feature embedding) over a COO graph —
+    out[v] = reduce_{(u,v,w)} w·feats[u]. The GCN aggregation atom."""
+    vals = gas_gather(feats, src)
+    if op == "add":
+        vals = vals * weights[:, None].astype(vals.dtype)
+    return gas_scatter(dst, vals, feats.shape[0], op=op, impl=impl)

@@ -1,0 +1,177 @@
+"""CGTrans — Compressive Graph Transmission (the paper's §3.2) on a mesh.
+
+The storage tier is the ``data`` mesh axis: each shard owns a vertex interval
+(features) and all edges whose *source* lies in it (gathers are local — the
+in-SSD invariant). Two dataflows over identical math:
+
+* ``baseline``  — GCNAX-style: ship **raw** gathered neighbor features to the
+  destination owner, aggregate there. Interconnect bytes ∝ E·F (or B·K·F for
+  sampled SAGE) — the paper's "slow SSD bus" regime.
+* ``cgtrans``   — aggregate **at the owner** into per-destination partials and
+  ship only those. Interconnect bytes ∝ V·F (or B·F): a fan-in/fan-out×
+  compression — the paper's 50×.
+
+Both are exposed full-graph (edge COO) and sampled (GraphSAGE fan-out).
+``benchmarks/collective_bytes.py`` lowers both on the production mesh and
+diffs the collective bytes in the compiled HLO — the mechanism, measured.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import gas
+
+AXIS = "data"  # the storage-tier axis
+
+
+# ---------------------------------------------------------------------------
+# full-graph edge aggregation (GCN):  out[v] = Σ_{(u,v,w)∈E} w · feats[u]
+# ---------------------------------------------------------------------------
+
+def _agg_local(feats, src_local, dst_global, w, mask, n_vertices, op, impl):
+    """In-SSD step: local gather + segment-reduce into global dst bins."""
+    gathered = gas.gas_gather(feats, src_local)          # LOCAL by construction
+    return gas.gas_scatter_weighted(
+        dst_global, gathered, w, mask, n_vertices, op=op, impl=impl)
+
+
+def aggregate_edges(
+    feats: jax.Array,        # (P, part, F) owner-sharded vertex features
+    src_local: jax.Array,    # (P, E) local src ids
+    dst_global: jax.Array,   # (P, E) global dst ids
+    weights: jax.Array,      # (P, E)
+    mask: jax.Array,         # (P, E)
+    *,
+    mesh: Optional[Mesh] = None,
+    dataflow: str = "cgtrans",      # cgtrans | baseline
+    op: gas.Op = "add",
+    impl: str = "xla",
+) -> jax.Array:
+    """Returns (P, part, F) aggregated destination features, owner-sharded."""
+    Pn, part, F = feats.shape
+    V = Pn * part
+
+    if mesh is None or AXIS not in mesh.axis_names or mesh.shape[AXIS] == 1:
+        # single-shard reference: both dataflows degenerate to one reduction
+        out = _agg_local(
+            feats.reshape(V, F),
+            (src_local + (jnp.arange(Pn) * part)[:, None]).reshape(-1),
+            dst_global.reshape(-1), weights.reshape(-1), mask.reshape(-1),
+            V, op, impl)
+        return out.reshape(Pn, part, F)
+
+    n = mesh.shape[AXIS]
+    assert Pn == n, f"partitions ({Pn}) must equal data-axis size ({n})"
+
+    if dataflow == "cgtrans":
+        def shard_fn(f, s, d, w, m):
+            # f: (1, part, F); edge arrays (1, E)
+            partial = _agg_local(f[0], s[0], d[0], w[0], m[0], V, op, impl)
+            # compressed transmission: reduce-scatter the (V, F) partials so
+            # each shard receives exactly its owned interval, aggregated.
+            if op == "add":
+                out = lax.psum_scatter(partial.reshape(n, part, F), AXIS,
+                                       scatter_dimension=0)
+            else:
+                # max/min have no fused reduce-scatter; all-reduce then slice
+                out = lax.pmax(partial, AXIS) if op == "max" else lax.pmin(partial, AXIS)
+                i = lax.axis_index(AXIS)
+                out = lax.dynamic_slice_in_dim(out.reshape(n, part, F), i, 1, 0)[0]
+            return out[None]
+
+        return jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+            out_specs=P(AXIS))(feats, src_local, dst_global, weights, mask)
+
+    if dataflow == "baseline":
+        def shard_fn(f, s, d, w, m):
+            # raw transmission: gather locally, ship the full edge payload
+            raw = gas.gas_gather(f[0], s[0]) * w[0][:, None].astype(f.dtype)
+            raw = jnp.where(m[0][:, None], raw, 0)
+            all_raw = lax.all_gather(raw, AXIS)          # (n, E, F) — E·F·n bytes
+            all_dst = lax.all_gather(d[0], AXIS)
+            all_m = lax.all_gather(m[0], AXIS)
+            # destination side ("the accelerator"): keep only owned interval
+            lo = lax.axis_index(AXIS) * part
+            rel = all_dst.reshape(-1) - lo
+            ok = all_m.reshape(-1) & (rel >= 0) & (rel < part)
+            out = gas.gas_scatter_weighted(
+                jnp.clip(rel, 0, part - 1), all_raw.reshape(-1, F),
+                jnp.ones_like(rel, f.dtype), ok, part, op=op, impl=impl)
+            return out[None]
+
+        return jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+            out_specs=P(AXIS))(feats, src_local, dst_global, weights, mask)
+
+    raise ValueError(dataflow)
+
+
+# ---------------------------------------------------------------------------
+# sampled GraphSAGE aggregation: out[b] = mean_k feats[nbrs[b, k]]
+# ---------------------------------------------------------------------------
+
+def aggregate_sampled(
+    feats: jax.Array,     # (P, part, F) owner-sharded features
+    nbrs: jax.Array,      # (P, B_loc, K) global neighbor ids, seed-sharded
+    mask: jax.Array,      # (P, B_loc, K)
+    *,
+    mesh: Optional[Mesh] = None,
+    dataflow: str = "cgtrans",
+) -> jax.Array:
+    """Returns (P, B_loc, F) mean-aggregated neighbor features per seed."""
+    Pn, part, F = feats.shape
+    _, B_loc, K = nbrs.shape
+
+    if mesh is None or AXIS not in mesh.axis_names or mesh.shape[AXIS] == 1:
+        table = feats.reshape(Pn * part, F)
+        g = gas.gas_gather(table, nbrs.reshape(-1)).reshape(Pn, B_loc, K, F)
+        g = jnp.where(mask[..., None], g, 0)
+        cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1)
+        return g.sum(2) / cnt.astype(g.dtype)
+
+    n = mesh.shape[AXIS]
+
+    def shard_fn(f, nb, m):
+        f, nb, m = f[0], nb[0], m[0]
+        # request broadcast (ids only — tiny; "addresses into the SSD")
+        ids = lax.all_gather(nb, AXIS)                   # (n, B_loc, K)
+        msk = lax.all_gather(m, AXIS)
+        lo = lax.axis_index(AXIS) * part
+        rel = ids - lo
+        own = msk & (rel >= 0) & (rel < part)
+        rows = gas.gas_gather(f, jnp.clip(rel, 0, part - 1).reshape(-1, K))
+        rows = jnp.where(own.reshape(-1, K)[..., None], rows.astype(f.dtype), 0)
+
+        if dataflow == "cgtrans":
+            # in-SSD aggregation: partial sum per seed, ship (n·B_loc, F)
+            part_sum = rows.sum(1).reshape(n, B_loc, F)
+            part_cnt = own.sum(-1).astype(f.dtype)       # (n, B_loc)
+            tot = lax.all_to_all(part_sum, AXIS, split_axis=0, concat_axis=0,
+                                 tiled=False)
+            cnt = lax.all_to_all(part_cnt[..., None], AXIS, split_axis=0,
+                                 concat_axis=0, tiled=False)
+            out = tot.sum(0) / jnp.maximum(cnt.sum(0), 1)
+            return out[None]
+
+        # baseline: ship raw (n·B_loc·K, F) neighbor rows to seed owners
+        raw = rows.reshape(n, B_loc, K, F)
+        raw = lax.all_to_all(raw, AXIS, split_axis=0, concat_axis=0, tiled=False)
+        ok = lax.all_to_all(own.reshape(n, B_loc, K)[..., None].astype(f.dtype),
+                            AXIS, split_axis=0, concat_axis=0, tiled=False)
+        out = raw.sum(0).sum(1) / jnp.maximum(ok.sum(0).sum(1), 1)
+        return out[None]
+
+    return jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS)),
+        out_specs=P(AXIS))(feats, nbrs, mask)

@@ -1,0 +1,128 @@
+"""GCN / GraphSAGE models on the CGTrans substrate (the paper's workload).
+
+Two entry styles:
+
+* ``gcn_forward_full`` — full-graph GCN layers (aggregation = CGTrans edge
+  dataflow, combination = tensor-parallel matmul). Used by correctness tests
+  and the full-graph benchmarks.
+* ``sage_*`` — minibatch GraphSAGE (fan-out sampling, the paper's deployed
+  algorithm §4.2). Vertex features live **owner-sharded on the storage tier**
+  (never shipped raw under CGTrans); the training batch carries only ids.
+  Layer-1's remote feature aggregation is the distributed step; deeper layers
+  compute on the locally-materialized subgraph (standard practice).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.common.schema import ParamDef
+from repro.core import cgtrans
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    n_features: int
+    hidden: int = 128
+    n_classes: int = 16
+    fanout: int = 50             # paper: GraphSAGE samples 50 neighbors
+    aggregate: str = "add"       # add | max  (paper: sum and max are common)
+    dataflow: str = "cgtrans"    # cgtrans | baseline
+    n_layers: int = 2
+
+
+def gcn_schema(cfg: GCNConfig) -> Dict[str, Any]:
+    F, H, C = cfg.n_features, cfg.hidden, cfg.n_classes
+    s: Dict[str, Any] = {}
+    d_in = F
+    for i in range(cfg.n_layers):
+        d_out = H
+        # SAGE concat [self ‖ aggregated] → weight is (2·d_in, d_out)
+        s[f"w{i}"] = ParamDef((2 * d_in, d_out), ("embed", "ff"), init="lecun")
+        s[f"b{i}"] = ParamDef((d_out,), ("ff",), init="zeros")
+        d_in = H
+    s["w_out"] = ParamDef((d_in, C), ("embed", None), init="lecun")
+    s["b_out"] = ParamDef((C,), (None,), init="zeros")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# full-graph GCN
+# ---------------------------------------------------------------------------
+
+def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
+                     cfg: GCNConfig, *, mesh: Optional[Mesh] = None,
+                     impl: str = "xla"):
+    """feats: (P, part, F) owner-sharded. Returns (P, part, C) logits."""
+    h = feats
+    for i in range(cfg.n_layers):
+        agg = cgtrans.aggregate_edges(
+            h, src_local, dst_global, weights, mask,
+            mesh=mesh, dataflow=cfg.dataflow, op=cfg.aggregate, impl=impl)
+        if cfg.aggregate == "max":
+            agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
+        h = jnp.concatenate([h, agg], axis=-1)
+        h = jax.nn.relu(jnp.einsum("pvf,fh->pvh", h, params[f"w{i}"]) + params[f"b{i}"])
+    return jnp.einsum("pvh,hc->pvc", h, params["w_out"]) + params["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# minibatch GraphSAGE
+# ---------------------------------------------------------------------------
+
+def lookup_rows(feats, ids, *, mesh=None, dataflow="cgtrans"):
+    """Distributed row lookup: ids (P, B_loc) → (P, B_loc, F)."""
+    nbrs = ids[..., None]
+    mask = jnp.ones_like(nbrs, dtype=bool)
+    return cgtrans.aggregate_sampled(feats, nbrs, mask, mesh=mesh, dataflow=dataflow)
+
+
+def sage_forward(params, feats, batch, cfg: GCNConfig, *,
+                 mesh: Optional[Mesh] = None):
+    """2-layer minibatch GraphSAGE.
+
+    batch (all seed-sharded on the data axis, leading dim P):
+      seeds (P, B)            seed vertex ids
+      nbrs1 (P, B, K1)        1-hop samples
+      mask1 (P, B, K1)
+      nbrs2 (P, B·(1+K1), K2) 2-hop samples for every layer-1 vertex
+      mask2 (P, B·(1+K1), K2)
+
+    Returns (P, B, C) logits.
+    """
+    Pn, B = batch["seeds"].shape
+    K1 = batch["nbrs1"].shape[-1]
+
+    ids1 = jnp.concatenate([batch["seeds"][..., None], batch["nbrs1"]], axis=-1)
+    flat1 = ids1.reshape(Pn, B * (1 + K1))
+
+    # distributed step: fetch self features + aggregate 2-hop neighborhoods.
+    x_self = lookup_rows(feats, flat1, mesh=mesh, dataflow=cfg.dataflow)
+    x_agg = cgtrans.aggregate_sampled(
+        feats, batch["nbrs2"], batch["mask2"], mesh=mesh, dataflow=cfg.dataflow)
+
+    h1 = jnp.concatenate([x_self, x_agg], axis=-1)
+    h1 = jax.nn.relu(jnp.einsum("pbf,fh->pbh", h1, params["w0"]) + params["b0"])
+    h1 = h1.reshape(Pn, B, 1 + K1, -1)
+
+    # local step: aggregate 1-hop h1 per seed.
+    m1 = batch["mask1"][..., None].astype(h1.dtype)
+    agg1 = (h1[:, :, 1:] * m1).sum(2) / jnp.maximum(m1.sum(2), 1.0)
+    h2 = jnp.concatenate([h1[:, :, 0], agg1], axis=-1)
+    h2 = jax.nn.relu(jnp.einsum("pbf,fh->pbh", h2, params["w1"]) + params["b1"])
+    return jnp.einsum("pbh,hc->pbc", h2, params["w_out"]) + params["b_out"]
+
+
+def sage_loss(params, feats, batch, cfg: GCNConfig, *,
+              mesh: Optional[Mesh] = None):
+    logits = sage_forward(params, feats, batch, cfg, mesh=mesh)
+    labels = batch["labels"]                  # (P, B)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    acc = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+    return nll.mean(), {"loss": nll.mean(), "acc": acc.mean()}

@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    GraphBatchStream,
+    ShardedTokenFiles,
+    TokenStream,
+    synthetic_node_labels,
+)
+
+__all__ = ["GraphBatchStream", "ShardedTokenFiles", "TokenStream",
+           "synthetic_node_labels"]

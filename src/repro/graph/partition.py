@@ -1,0 +1,73 @@
+"""Vertex-interval graph partitioning (paper §4.3, "vertex-orientated").
+
+Vertices are split into P contiguous intervals; each partition *owns* the
+features of its interval and every edge whose **source** lies in it. That is
+the in-SSD invariant of DESIGN §2: the gather side of gather-and-scatter is
+always local to the shard — only aggregated destination features ever cross
+the interconnect (CGTrans).
+
+Edges per partition are padded to the max count so the device-side arrays are
+regular (stackable into one (P, E_max) batch for shard_map).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.graph.structure import COOGraph
+
+
+@dataclasses.dataclass
+class PartitionedGraph:
+    n_vertices: int
+    n_parts: int
+    part_size: int               # vertices per interval (padded)
+    src: np.ndarray              # (P, E_max) int32, LOCAL src ids (src - lo)
+    dst: np.ndarray              # (P, E_max) int32, GLOBAL dst ids
+    weights: np.ndarray          # (P, E_max) float32
+    mask: np.ndarray             # (P, E_max) bool — padding mask
+    features: Optional[np.ndarray] = None  # (P, part_size, F) owner shards
+
+    @property
+    def e_max(self) -> int:
+        return int(self.src.shape[1])
+
+
+def partition_by_src(g: COOGraph, n_parts: int, *, pad_multiple: int = 8) -> PartitionedGraph:
+    V = g.n_vertices
+    part = -(-V // n_parts)                      # ceil
+    part = -(-part // pad_multiple) * pad_multiple
+    owner = g.src // part
+    order = np.argsort(owner, kind="stable")
+    src, dst = g.src[order], g.dst[order]
+    w = g.weights[order] if g.weights is not None else np.ones_like(src, np.float32)
+    counts = np.bincount(owner, minlength=n_parts)
+    e_max = max(int(counts.max()), 1)
+    e_max = -(-e_max // pad_multiple) * pad_multiple
+
+    ps = np.zeros((n_parts, e_max), np.int32)
+    pd = np.zeros((n_parts, e_max), np.int32)
+    pw = np.zeros((n_parts, e_max), np.float32)
+    pm = np.zeros((n_parts, e_max), bool)
+    off = 0
+    for p in range(n_parts):
+        c = int(counts[p])
+        ps[p, :c] = src[off:off + c] - p * part  # local ids
+        pd[p, :c] = dst[off:off + c]
+        pw[p, :c] = w[off:off + c]
+        pm[p, :c] = True
+        off += c
+
+    feats = None
+    if g.features is not None:
+        F = g.features.shape[1]
+        feats = np.zeros((n_parts, part, F), g.features.dtype)
+        for p in range(n_parts):
+            lo, hi = p * part, min((p + 1) * part, V)
+            if lo < V:
+                feats[p, : hi - lo] = g.features[lo:hi]
+
+    return PartitionedGraph(V, n_parts, part, ps, pd, pw, pm, feats)

@@ -1,0 +1,55 @@
+"""GraphSAGE fixed-fan-out neighbor sampling (Hamilton et al., the paper's
+deployed algorithm, fan-out 50 per §4.2).
+
+Sampling with replacement from each vertex's neighbor list yields perfectly
+regular (batch, fanout) shapes — the paper leans on exactly this property for
+load balance, and it is also what makes the device-side aggregation a
+fixed-shape segment reduction.
+
+Both a host (numpy, data-pipeline) and a device (jax, on-accelerator) sampler
+are provided; they draw from the same CSR view.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structure import COOGraph
+
+
+def host_sample(g: COOGraph, seeds: np.ndarray, fanout: int,
+                *, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (neighbors (B, fanout) int32, mask (B, fanout) bool)."""
+    rng = np.random.default_rng(seed)
+    indptr, indices, _ = g.to_csr()
+    B = seeds.shape[0]
+    out = np.zeros((B, fanout), np.int32)
+    mask = np.zeros((B, fanout), bool)
+    for i, s in enumerate(seeds):
+        lo, hi = int(indptr[s]), int(indptr[s + 1])
+        deg = hi - lo
+        if deg == 0:
+            out[i] = s  # isolated vertex aggregates itself
+            continue
+        out[i] = indices[lo + rng.integers(0, deg, fanout)]
+        mask[i] = True
+    return out, mask
+
+
+def device_sample(indptr: jax.Array, indices: jax.Array, seeds: jax.Array,
+                  fanout: int, key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """On-device fixed-fan-out sampling from a CSR graph."""
+    lo = jnp.take(indptr, seeds)
+    hi = jnp.take(indptr, seeds + 1)
+    deg = (hi - lo).astype(jnp.int32)
+    u = jax.random.uniform(key, (seeds.shape[0], fanout))
+    offs = (u * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
+    idx = jnp.clip(lo[:, None] + offs, 0, indices.shape[0] - 1)
+    nbrs = jnp.take(indices, idx)
+    mask = jnp.broadcast_to(deg[:, None] > 0, nbrs.shape)
+    nbrs = jnp.where(mask, nbrs, seeds[:, None])
+    return nbrs.astype(jnp.int32), mask

@@ -1,0 +1,70 @@
+"""Synthetic graph generators.
+
+* ``rmat`` — Graph500-style Kronecker/R-MAT (A=0.57,B=0.19,C=0.19), the
+  generator behind the paper's Fig 16(b) "G500 dataset at different scales".
+* ``table2_like`` — graphs with the vertex/edge/feature *ratios* of the
+  paper's Table II datasets, scaled down by a factor so they fit in CI. The
+  full-size Table II parameters feed the analytic cost model directly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.graph.structure import COOGraph
+
+# Paper Table II (full-size): name -> (nodes, edges, n_features)
+TABLE_II: Dict[str, tuple] = {
+    "Reddit": (37.3e6, 53.9e9, 602),
+    "Movielens": (22.2e6, 59.2e9, 1000),
+    "Amazon": (265.9e6, 9.5e9, 32),
+    "OGBN-100M": (179.1e6, 5.0e9, 32),
+    "Protein-PI": (9.1e6, 8.8e9, 512),
+}
+
+
+def rmat(scale: int, edge_factor: int = 16, *, a=0.57, b=0.19, c=0.19,
+         seed: int = 0, weights: bool = False) -> COOGraph:
+    """R-MAT graph with 2^scale vertices and edge_factor·2^scale edges."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = edge_factor * n
+    src = np.zeros(m, np.int64)
+    dst = np.zeros(m, np.int64)
+    ab, abc = a + b, a + b + c
+    for bit in range(scale):
+        r = rng.random(m)
+        go_right = (r >= a) & (r < ab)          # B quadrant: dst high bit
+        go_down = (r >= ab) & (r < abc)         # C quadrant: src high bit
+        go_diag = r >= abc                      # D quadrant: both
+        src |= ((go_down | go_diag).astype(np.int64)) << bit
+        dst |= ((go_right | go_diag).astype(np.int64)) << bit
+    w = rng.random(m).astype(np.float32) + 0.05 if weights else None
+    return COOGraph(n, src.astype(np.int32), dst.astype(np.int32), w)
+
+
+def uniform_graph(n_vertices: int, n_edges: int, *, seed: int = 0,
+                  n_features: int = 0, weights: bool = False) -> COOGraph:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n_edges, dtype=np.int32)
+    dst = rng.integers(0, n_vertices, n_edges, dtype=np.int32)
+    w = rng.random(n_edges).astype(np.float32) + 0.05 if weights else None
+    feats = (rng.standard_normal((n_vertices, n_features)).astype(np.float32)
+             if n_features else None)
+    return COOGraph(n_vertices, src, dst, w, feats)
+
+
+def table2_like(name: str, *, scale_down: float = 1e4, seed: int = 0,
+                max_features: int = 64) -> COOGraph:
+    """A small graph preserving a Table II dataset's shape ratios."""
+    nodes, edges, feats = TABLE_II[name]
+    n = max(int(nodes / scale_down), 64)
+    m = max(int(edges / scale_down), 4 * n)
+    f = min(int(feats), max_features)
+    g = rmat(int(np.ceil(np.log2(n))), max(m // (1 << int(np.ceil(np.log2(n)))), 1),
+             seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    g.features = rng.standard_normal((g.n_vertices, f)).astype(np.float32)
+    return g

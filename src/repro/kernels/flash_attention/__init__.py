@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention import ops, ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+__all__ = ["ops", "ref", "flash_attention", "flash_attention_ref"]

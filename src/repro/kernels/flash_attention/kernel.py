@@ -1,0 +1,121 @@
+"""Blocked flash attention (Pallas/TPU) with causal/local-window/softcap.
+
+Grid (batch·q_heads, q_blocks, kv_blocks), kv innermost. Online-softmax
+running stats (m, l) and the output accumulator live in VMEM scratch and are
+finalized at the last kv block. GQA is expressed in the k/v BlockSpec index
+maps (q head → kv head), so grouped heads share kv tiles without replication.
+
+Block-level masking: kv blocks fully outside the causal/window band are
+skipped with ``pl.when`` (no matmul, no DMA cost on TPU thanks to the
+revisited output block) — the same skip idea the GAS kernel uses for
+occupancy, applied to the attention band structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 causal: bool, window: int, softcap: float, kv_len: int):
+    qb, kb = pl.program_id(1), pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qb * BLOCK_Q
+    k_start = kb * BLOCK_K
+    # band check: does this kv block intersect the visible band of this q block?
+    visible = jnp.bool_(True)
+    if causal:
+        visible &= k_start <= q_start + BLOCK_Q - 1
+    if window:
+        # newest query is q_start+BQ-1; oldest visible key is q_pos-window+1
+        visible &= k_start + BLOCK_K - 1 > q_start - window
+
+    @pl.when(visible)
+    def _block():
+        q = q_ref[0]                                    # (BQ, hd)
+        k = k_ref[0]                                    # (BK, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (BQ, BK)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (BLOCK_Q, BLOCK_K), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (BLOCK_Q, BLOCK_K), 1)
+        ok = kpos < kv_len                              # padded tail keys
+        if causal:
+            ok &= qpos >= kpos
+        if window:
+            ok &= qpos - kpos < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                             # (BQ,)
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(kb == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "kv_len", "n_kv_heads", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool, window: int, softcap: float,
+                           kv_len: int, n_kv_heads: int,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B·H, S, hd); k,v: (B·Hkv, T, hd); S,T multiples of block sizes.
+
+    Head layout is flattened [b-major, h-minor]; q head i maps to kv head
+    i // (H / Hkv) within its batch row.
+    """
+    BH, S, hd = q.shape
+    BK_, T, _ = k.shape
+    H = BH // (BK_ // n_kv_heads)
+    G = H // n_kv_heads
+
+    def kv_index(bh, qb, kb):
+        b, h = bh // H, bh % H
+        return (b * n_kv_heads + h // G, kb, 0)
+
+    grid = (BH, S // BLOCK_Q, T // BLOCK_K)
+    kernel = functools.partial(
+        _attn_kernel, causal=causal, window=window, softcap=softcap, kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_Q, hd), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, BLOCK_K, hd), kv_index),
+            pl.BlockSpec((1, BLOCK_K, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, hd), lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BLOCK_Q, hd), jnp.float32),   # acc
+            pltpu.VMEM((BLOCK_Q,), jnp.float32),      # m (running max)
+            pltpu.VMEM((BLOCK_Q,), jnp.float32),      # l (running sum)
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,46 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Accepts the model's (B, S, H, hd) layout, flattens heads, pads sequence
+lengths to block multiples, dispatches interpret-mode off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, softcap: float = 0.0,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B,S,H,hd) pre-scaled; k,v: (B,T,Hkv,hd) → (B,S,H,hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+
+    pad_s = (-S) % K.BLOCK_Q
+    pad_t = (-T) % K.BLOCK_K
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, T, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, T, hd)
+    if pad_s:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_s), (0, 0)))
+    if pad_t:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_t), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_t), (0, 0)))
+
+    out = K.flash_attention_pallas(
+        qf, kf, vf, causal=causal, window=window, softcap=softcap,
+        kv_len=T, n_kv_heads=Hkv, interpret=interpret)
+    out = out[:, :S].reshape(B, H, S, hd)
+    return jnp.moveaxis(out, 1, 2)
+
+
+__all__ = ["flash_attention", "flash_attention_ref"]

@@ -1,0 +1,32 @@
+"""Naive full-materialization attention oracle."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jax.Array:
+    """q: (B,S,H,hd) pre-scaled; k,v: (B,T,Hkv,hd). Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qr = q.reshape(B, S, Hkv, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qr, k, preferred_element_type=jnp.float32)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)
+    kpos = jnp.arange(T)
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return o.reshape(B, S, H, hd)

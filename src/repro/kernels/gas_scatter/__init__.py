@@ -1,0 +1,5 @@
+from repro.kernels.gas_scatter import ops, ref
+from repro.kernels.gas_scatter.ops import gas_scatter, occupancy_map
+from repro.kernels.gas_scatter.ref import gas_scatter_ref
+
+__all__ = ["ops", "ref", "gas_scatter", "occupancy_map", "gas_scatter_ref"]

@@ -1,0 +1,73 @@
+"""jit'd public wrapper for the FAST-GAS scatter kernel.
+
+Handles padding to hardware tiles, builds the idle-skip occupancy bitmap, and
+dispatches: Pallas (TPU, or interpret-mode on CPU) vs the jnp reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gas_scatter import kernel as K
+from repro.kernels.gas_scatter.ref import gas_scatter_ref
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int, fill):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def occupancy_map(dst: jax.Array, n_row_blocks: int, edge_tile: int) -> jax.Array:
+    """(row_blocks, edge_tiles) int32: does edge tile e touch row block r?
+
+    This is the idle-skip buffer content (paper Fig 11(c)) — computed once
+    per (graph partition, batch) and reused across feature blocks.
+    """
+    E = dst.shape[0]
+    tiles = dst.reshape(E // edge_tile, edge_tile)
+    blk = tiles // K.ROW_BLOCK                                  # (T, et)
+    r = jnp.arange(n_row_blocks, dtype=jnp.int32)
+    hit = (blk[None, :, :] == r[:, None, None]).any(-1)         # (R, T)
+    return hit.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "op", "interpret"))
+def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
+                op: str = "add", interpret: bool | None = None) -> jax.Array:
+    """Scatter-reduce ``values`` (E, F) into (n_rows, F) by ``dst`` (E,).
+
+    Matches ``ref.gas_scatter_ref`` exactly (out-of-range dst ignored).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if values.ndim == 1:
+        return gas_scatter(dst, values[:, None], n_rows, op=op,
+                           interpret=interpret)[:, 0]
+
+    E, F = values.shape
+    et = K.EDGE_TILE_ADD if op == "add" else K.EDGE_TILE_CMP
+    R = ((n_rows + K.ROW_BLOCK - 1) // K.ROW_BLOCK) * K.ROW_BLOCK
+
+    # dead-row padding: invalid/padded edges target row R (outside all blocks)
+    ok = (dst >= 0) & (dst < n_rows)
+    dstp = jnp.where(ok, dst, R)
+    dstp = _pad_to(dstp, et, 0, R)
+    fill = {"add": 0.0, "max": -jnp.inf, "min": jnp.inf}[op]
+    valp = jnp.where(ok[:, None], values, fill)
+    valp = _pad_to(valp, et, 0, fill)
+    valp = _pad_to(valp, K.FEAT_BLOCK, 1, fill)
+
+    occ = occupancy_map(dstp, R // K.ROW_BLOCK, et)
+    out = K.gas_scatter_pallas(dstp, valp, occ, R, op=op, interpret=interpret)
+    return out[:n_rows, :F]
+
+
+__all__ = ["gas_scatter", "gas_scatter_ref", "occupancy_map"]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the FAST-GAS scatter kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gas_scatter_ref(dst: jax.Array, values: jax.Array, n_rows: int, *,
+                    op: str = "add") -> jax.Array:
+    """dst: (E,) int32 row ids; values: (E, F). Returns (n_rows, F).
+
+    Out-of-range dst (e.g. the dead-row convention) contribute nothing.
+    max/min leave ∓inf in untouched rows (mask with a count if needed).
+    """
+    ok = (dst >= 0) & (dst < n_rows)
+    safe = jnp.where(ok, dst, n_rows)
+    if op == "add":
+        vals = jnp.where(ok[:, None], values, 0)
+        return jax.ops.segment_sum(vals, safe, num_segments=n_rows + 1)[:n_rows]
+    if op == "max":
+        vals = jnp.where(ok[:, None], values, -jnp.inf)
+        return jax.ops.segment_max(vals, safe, num_segments=n_rows + 1)[:n_rows]
+    if op == "min":
+        vals = jnp.where(ok[:, None], values, jnp.inf)
+        return jax.ops.segment_min(vals, safe, num_segments=n_rows + 1)[:n_rows]
+    raise ValueError(op)

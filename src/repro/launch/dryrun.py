@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be run as its own process (the two lines above lock jax to 512 fake CPU
+devices before any other import). Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+        --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+
+For each cell: jit(step).lower(structs).compile() on the (16,16) single-pod
+mesh AND the (2,16,16) multi-pod mesh; records memory_analysis(),
+cost_analysis() and the HLO-parsed collective bytes into
+results/dryrun/<arch>__<shape>__<mesh>.json (incremental cache keyed by a
+code-version stamp — re-runs skip green cells).
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.common.config import SHAPES, TrainConfig
+from repro.launch import hlo_analysis as H
+from repro.launch import roofline as R
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_case
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+VERSION = "v16"  # bump to invalidate cached cells after code changes
+
+
+def input_specs(arch: str, shape_name: str, mesh):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = configs.get_config(arch)
+    shape = configs.get_shape(shape_name)
+    return build_case(cfg, shape, mesh)
+
+
+def _mem_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[k] = getattr(ma, k, None)
+    args = out.get("argument_size_in_bytes") or 0
+    temp = out.get("temp_size_in_bytes") or 0
+    outb = out.get("output_size_in_bytes") or 0
+    alias = out.get("alias_size_in_bytes") or 0
+    out["peak_bytes_per_device"] = args + temp + outb - alias
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             results_dir: str = RESULTS_DIR, force: bool = False,
+             verbose: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(results_dir, exist_ok=True)
+    path = os.path.join(results_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        if prev.get("version") == VERSION and prev.get("ok"):
+            if verbose:
+                print(f"[cache] {arch} × {shape_name} × {mesh_name}")
+            return prev
+
+    cfg = configs.get_config(arch)
+    shape = configs.get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "version": VERSION, "ok": False}
+    try:
+        case = build_case(cfg, shape, mesh)
+        with mesh:
+            jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                             out_shardings=case.out_shardings,
+                             donate_argnums=case.donate)
+            lowered = jitted.lower(*case.arg_structs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = _mem_stats(compiled)
+        # exact per-device argument residency (weights + opt state + caches):
+        # struct bytes divided by the shards of its PartitionSpec
+        import numpy as _np
+        def _arg_bytes(struct, shard):
+            spec = shard.spec
+            div = 1
+            for entry in spec:
+                for ax in ((entry,) if isinstance(entry, str) else (entry or ())):
+                    div *= mesh.shape[ax]
+            return int(_np.prod(struct.shape)) * struct.dtype.itemsize / div
+        mem["args_bytes_per_device_exact"] = float(sum(
+            _arg_bytes(s, sh) for s, sh in zip(
+                jax.tree.leaves(case.arg_structs),
+                jax.tree.leaves(case.in_shardings))))
+        hlo_text = compiled.as_text()
+        # CPU backend emulates bf16 dots via f32 operand conversion (hoisted
+        # out of scans) — buffers a TPU compile would never materialize.
+        emu = H.bf16_emulation_bytes(hlo_text)
+        mem["cpu_bf16_emulation_bytes"] = emu
+        mem["peak_bytes_adjusted"] = mem["peak_bytes_per_device"] - emu
+        ca = compiled.cost_analysis() or {}
+        # HLO-text analysis with while trip-count multiplicities — XLA's own
+        # cost_analysis counts scan bodies once (recorded raw for reference).
+        summary = H.analyze(hlo_text)
+        flops = summary.dot_flops
+        bytes_acc = summary.hbm_bytes
+        colls = summary.collectives
+
+        from repro.common.schema import count_params
+        from repro.models.transformer import model_schema
+        n_params = count_params(model_schema(
+            cfg, max_seq=shape.seq_len if cfg.is_encoder_decoder else 0))
+        n_active = R.active_params(cfg, n_params)
+        n_dev = mesh.size
+        toks_per_dev = (shape.tokens if shape.kind != "decode"
+                        else shape.global_batch) / n_dev
+        mflops = R.model_flops_estimate(n_params, n_active, shape.kind, toks_per_dev)
+        terms = R.roofline_terms(flops, bytes_acc, colls, model_flops=mflops)
+
+        rec.update(ok=True,
+                   n_devices=n_dev,
+                   n_params=n_params,
+                   n_active_params=n_active,
+                   lower_s=round(t_lower, 2),
+                   compile_s=round(t_compile, 2),
+                   memory=mem,
+                   cost_analysis_raw={
+                       "flops": float(ca.get("flops", 0.0)),
+                       "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                       "note": "XLA counts while bodies once; roofline uses "
+                               "trip-corrected HLO parse instead"},
+                   roofline=terms.as_dict())
+        if verbose:
+            peak = mem["peak_bytes_adjusted"] / 1e9
+            print(f"[ok] {arch} × {shape_name} × {mesh_name}: "
+                  f"{peak:.2f} GB/dev (raw {mem['peak_bytes_per_device'] / 1e9:.1f}), "
+                  f"{flops / 1e9:.1f} GFLOP/dev, "
+                  f"coll {terms.collective_bytes / 1e6:.1f} MB/dev, "
+                  f"dominant={terms.dominant} "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[FAIL] {arch} × {shape_name} × {mesh_name}: {rec['error']}")
+
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--results-dir", default=RESULTS_DIR)
+    args = ap.parse_args(argv)
+
+    cell_list = configs.cells()
+    if args.list:
+        for a, s in cell_list:
+            print(f"{a:24s} {s}")
+        print(f"{len(cell_list)} runnable cells "
+              f"({len(configs.SKIP_CELLS)} documented skips)")
+        return 0
+
+    archs = configs.ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            if (arch, shape) in configs.SKIP_CELLS:
+                print(f"[skip] {arch} × {shape}: {configs.SKIP_CELLS[(arch, shape)]}")
+                continue
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, results_dir=args.results_dir,
+                               force=args.force)
+                failures += 0 if rec.get("ok") else 1
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

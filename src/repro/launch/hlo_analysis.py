@@ -1,0 +1,303 @@
+"""Trip-count-aware analysis of post-SPMD optimized HLO.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE — useless for
+scanned layer stacks. This module parses the optimized HLO text instead:
+
+  1. two-pass parse: first collect every instruction's result shape (operands
+     appear as %name references, resolved against this table), then build per
+     computation instruction lists;
+  2. build the call graph (while bodies/conditions via ``body=``/
+     ``condition=`` with ``known_trip_count`` from backend_config, fusions via
+     ``calls=``, reducers via ``to_apply=``) and propagate execution
+     multiplicities from ENTRY;
+  3. aggregate, weighted by multiplicity:
+       · dot FLOPs — exact: 2 · prod(result dims) · prod(lhs contracting dims)
+       · HBM traffic — post-fusion model: every top-level op reads its
+         (non-tuple) operands and writes its results once; fusions therefore
+         count only their real inputs/outputs — what fusion means for HBM;
+       · collective bytes by kind (max of operand/result bytes per op).
+
+Validated against unrolled compiles (tests/test_dryrun_small.py): scanned and
+unrolled lowerings agree on dot FLOPs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# HBM traffic WHITELIST: ops that move data on a TPU compile. CPU HLO leaves
+# elementwise chains as hundreds of top-level ops (each would count its
+# operands+results → 10-100× inflation); on TPU they fuse into the adjacent
+# matmul/fusion kernels, so only matmuls, explicit fusions, data movement and
+# gathers/scatters are charged.
+_TRAFFIC_OPS = {
+    "dot", "convolution", "fusion", "dynamic-update-slice", "dynamic-slice",
+    "gather", "scatter", "copy", "sort", "reduce-window", "cholesky",
+    "triangular-solve", "fft", "concatenate", "pad",
+}
+
+
+def _bytes_of(dt: str, dims: str) -> float:
+    size = _DTYPE_BYTES.get(dt)
+    if size is None:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return float(n * size)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: float
+    result_is_tuple: bool
+    result_dims: List[int]
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    calls: List[Tuple[str, float]]   # (callee, multiplier)
+
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line.startswith(" "):
+            header = _HEADER_RE.match(line)
+            if header:
+                name = header.group(2)
+                cur = Computation(name, [], [])
+                comps[name] = cur
+                if header.group(1):
+                    entry = name
+                continue
+            if line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        if s.startswith("ROOT "):
+            s = s[5:]
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        iname = s[:eq].strip().lstrip("%")
+        rhs = s[eq + 3:]
+        opm = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        if not opm:
+            continue
+        opcode = opm.group(1)
+        paren = rhs.index("(", opm.start())
+        depth, end = 0, paren
+        for i in range(paren, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        result_part = rhs[:opm.start()]
+        operand_part = rhs[paren:end + 1]
+        attrs = rhs[end + 1:]
+
+        shapes = _SHAPE_RE.findall(result_part)
+        res_bytes = sum(_bytes_of(d, dims) for d, dims in shapes)
+        is_tuple = result_part.lstrip().startswith("(") or len(shapes) > 1
+        dims0 = ([int(d) for d in shapes[0][1].split(",") if d] if shapes else [])
+        operands = _OPERAND_RE.findall(operand_part)
+        cur.instrs.append(Instr(iname, opcode, res_bytes, is_tuple, dims0,
+                                operands, attrs))
+
+        if opcode == "while":
+            trip = 1.0
+            tm = re.search(r'known_trip_count[^0-9]*(\d+)', attrs)
+            if tm:
+                trip = float(tm.group(1))
+            bm = re.search(r"body=%?([\w.\-]+)", attrs)
+            cm = re.search(r"condition=%?([\w.\-]+)", attrs)
+            if bm:
+                cur.calls.append((bm.group(1), trip))
+            if cm:
+                cur.calls.append((cm.group(1), trip + 1))
+        else:
+            for pat in (r"calls=%?([\w.\-]+)", r"to_apply=%?([\w.\-]+)",
+                        r"true_computation=%?([\w.\-]+)",
+                        r"false_computation=%?([\w.\-]+)"):
+                m = re.search(pat, attrs)
+                if m:
+                    cur.calls.append((m.group(1), 1.0))
+    return comps, entry
+
+
+def multiplicities(comps: Dict[str, Computation], entry: Optional[str]) -> Dict[str, float]:
+    mult: Dict[str, float] = {}
+    if entry is None:
+        return mult
+    stack = [(entry, 1.0)]
+    while stack:
+        name, m = stack.pop()
+        mult[name] = mult.get(name, 0.0) + m
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for callee, k in comp.calls:
+            stack.append((callee, m * k))
+    return mult
+
+
+@dataclasses.dataclass
+class HloSummary:
+    dot_flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collectives: Dict[str, Dict[str, float]]
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def bf16_emulation_bytes(text: str, min_bytes: float = 128e6) -> float:
+    """CPU-backend artifact detector: XLA CPU emulates bf16 dots by
+    f32-converting whole operands (and hoists the convert of scan-invariant
+    stacks out of the loop). A TPU compile feeds bf16 straight to the MXU —
+    these buffers would not exist. Returns the summed bytes of large
+    f32-convert-of-bf16 results so memory reports can show an adjusted
+    (TPU-realistic) peak alongside the raw CPU number."""
+    dtype: Dict[str, str] = {}
+    # first pass: map instruction name -> result dtype
+    for line in text.splitlines():
+        s = line.strip()
+        if s.startswith("ROOT "):
+            s = s[5:]
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        name = s[:eq].strip().lstrip("%")
+        m = _SHAPE_RE.search(s[eq + 3:])
+        if m:
+            dtype[name] = m.group(1)
+    total = 0.0
+    seen = set()
+    for line in text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?([\w.\-]+) = f32\[([\d,]+)\][^=]*? convert\(%([\w.\-]+)\)", s)
+        if not m:
+            continue
+        if dtype.get(m.group(3)) != "bf16":
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        b = n * 4.0
+        if b >= min_bytes and m.group(2) not in seen:
+            seen.add(m.group(2))   # count each distinct shape once (aliases)
+            total += b
+    return total
+
+
+def analyze(text: str) -> HloSummary:
+    comps, entry = parse_hlo(text)
+    mult = multiplicities(comps, entry)
+
+    # global name → (bytes, is_tuple, dims)
+    table: Dict[str, Tuple[float, bool, List[int]]] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            table[ins.name] = (ins.result_bytes, ins.result_is_tuple, ins.result_dims)
+
+    def operand_bytes(ins: Instr, cap: float = 0.0) -> float:
+        """Sum operand bytes; with ``cap``, each operand's contribution is
+        bounded — fusions embedding dynamic-slice read only a slice of big
+        scan-invariant operands, so charging the full buffer per iteration
+        inflates loop-body traffic ~100×."""
+        total = 0.0
+        for o in ins.operands:
+            b, is_tup, _ = table.get(o, (0.0, False, []))
+            if not is_tup:
+                total += min(b, cap) if cap else b
+        return total
+
+    def dot_flops(ins: Instr) -> float:
+        if ins.opcode not in ("dot", "convolution"):
+            return 0.0
+        out = 1
+        for d in ins.result_dims:
+            out *= d
+        contract = 1
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        if m and ins.operands:
+            _, _, lhs_dims = table.get(ins.operands[0], (0.0, False, []))
+            if m.group(1) and lhs_dims:
+                for i in m.group(1).split(","):
+                    idx = int(i)
+                    if idx < len(lhs_dims):
+                        contract *= lhs_dims[idx]
+        return 2.0 * out * contract
+
+    flops = 0.0
+    hbm = 0.0
+    colls = {k: {"count": 0.0, "bytes": 0.0} for k in _COLLECTIVES}
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for ins in comp.instrs:
+            flops += m * dot_flops(ins)
+            base = next((c for c in _COLLECTIVES if ins.opcode.startswith(c)), None)
+            if base is not None:
+                if ins.opcode.endswith("-done"):
+                    continue
+                colls[base]["count"] += m
+                colls[base]["bytes"] += m * max(ins.result_bytes, operand_bytes(ins))
+                continue
+            if ins.opcode in _TRAFFIC_OPS:
+                cap = max(4.0 * ins.result_bytes, 32e6) if ins.opcode == "fusion" else 0.0
+                opsum = operand_bytes(ins, cap)
+                if ins.opcode == "dynamic-slice":
+                    # reads+writes only the slice, not the source buffer
+                    hbm += m * 2 * ins.result_bytes
+                elif ins.opcode == "dynamic-update-slice" or (
+                        ins.opcode == "fusion" and "dynamic_update_slice" in ins.attrs):
+                    # in-place update: traffic = the update slice (r+w), not
+                    # the whole (aliased) stacked buffer
+                    max_op = 0.0
+                    for o in ins.operands:
+                        b, tup, _ = table.get(o, (0.0, True, []))
+                        if not tup:
+                            max_op = max(max_op, b)
+                    hbm += m * 2 * max(opsum - max_op, 0.0)
+                else:
+                    hbm += m * (ins.result_bytes + opsum)
+    return HloSummary(
+        dot_flops=flops, hbm_bytes=hbm,
+        collective_bytes=sum(v["bytes"] for v in colls.values()),
+        collectives=colls)

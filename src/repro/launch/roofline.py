@@ -1,0 +1,134 @@
+"""Roofline term extraction from compiled (dry-run) artifacts.
+
+Terms (per DESIGN §8; seconds, per device — post-SPMD HLO is per-device):
+
+  T_compute = flops / peak_bf16        (197 TFLOP/s)
+  T_memory  = bytes_accessed / hbm_bw  (819 GB/s)
+  T_coll    = collective_bytes / link  (50 GB/s per ICI link)
+
+``cost_analysis()`` provides flops + bytes accessed. Collective bytes are NOT
+in cost_analysis: we parse the optimized HLO and sum, per collective op, the
+max of (operand bytes, result bytes) — the ring-serialized wire volume is
+within 2×(n-1)/n of that for every collective family, and the convention is
+applied uniformly to every case (what matters for the perf loop is the
+delta).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.common.hw import V5E, ChipSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    size = _DTYPE_BYTES.get(dtype)
+    if size is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * size
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: {count, bytes} summed over ops (per device).
+
+    For each collective instruction line, bytes = max(sum of operand shape
+    bytes, sum of result shape bytes).
+    """
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        m = re.match(r"\s*(?:ROOT\s+)?%?([a-zA-Z0-9_.-]+)", lhs)
+        if not m:
+            continue
+        kind = None
+        rhs_stripped = rhs.lstrip()
+        # result shapes come first in rhs, then "op-name(operands...)"
+        opm = re.search(r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                        r"collective-permute)(?:-start|-done)?\(", rhs)
+        if not opm:
+            continue
+        kind = opm.group(1)
+        if "-done(" in rhs:   # avoid double counting start/done pairs
+            continue
+        paren = rhs.index("(", opm.start())
+        result_part = rhs[:opm.start()]
+        operand_part = rhs[paren:]
+        res_bytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(result_part))
+        opd_bytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(operand_part))
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += float(max(res_bytes, opd_bytes))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-device HLO flops
+    bytes_accessed: float        # per-device HBM traffic
+    collective_bytes: float      # per-device wire bytes
+    collectives: Dict[str, Dict[str, float]]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float = 0.0     # 6·N·D (train) / 2·N·D (fwd) per device
+    useful_ratio: float = 0.0    # model_flops / HLO flops
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collectives: Dict[str, Dict[str, float]],
+                   *, chip: ChipSpec = V5E,
+                   model_flops: float = 0.0) -> RooflineTerms:
+    cbytes = sum(v["bytes"] for v in collectives.values())
+    tc = flops / chip.peak_flops_bf16
+    tm = bytes_accessed / chip.hbm_bw
+    tl = cbytes / chip.ici_link_bw
+    dom = max((tc, "compute"), (tm, "memory"), (tl, "collective"))[1]
+    return RooflineTerms(
+        flops=flops, bytes_accessed=bytes_accessed, collective_bytes=cbytes,
+        collectives=collectives, t_compute=tc, t_memory=tm, t_collective=tl,
+        dominant=dom, model_flops=model_flops,
+        useful_ratio=(model_flops / flops) if flops else 0.0)
+
+
+def model_flops_estimate(n_params: int, n_active_params: int, shape_kind: str,
+                         tokens_per_device: float) -> float:
+    """6·N·D (train) or 2·N·D (fwd/decode) using ACTIVE params for MoE."""
+    n = n_active_params or n_params
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n * tokens_per_device
+
+
+def active_params(cfg, n_params: int) -> int:
+    """Approximate active-per-token params for MoE archs (top-k + shared)."""
+    if cfg.n_experts:
+        expert = 3 * cfg.d_model * cfg.d_ff
+        moe_layers = sum(1 for k in cfg.layer_kinds() if k == "moe")
+        routed_total = moe_layers * cfg.n_experts * expert
+        routed_active = moe_layers * cfg.top_k * expert
+        return n_params - routed_total + routed_active
+    return n_params

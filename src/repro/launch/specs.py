@@ -1,0 +1,134 @@
+"""Dry-run case assembly: (arch × shape × mesh) → step fn + structs + shardings.
+
+``input_specs`` follows the shannon/kernels pattern: ShapeDtypeStruct stand-ins
+for every input — weak-type-correct, shardable, zero device allocation.
+
+Per-shape logical rule overrides:
+  * long_500k (global_batch=1): "batch" resolves to no axis; the KV-cache
+    sequence dim ("seq_shard") takes ("pod","data") — 32-way sequence
+    parallelism so the 524288-token cache fits per chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.common.config import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+from repro.common.logical import DEFAULT_RULES, to_physical
+from repro.common.schema import param_logical_specs, param_structs
+from repro.train import step as S
+
+LONG_CONTEXT_RULES = dict(
+    DEFAULT_RULES,
+    batch=(),                      # B=1: nothing to shard
+    seq_shard=("pod", "data"),     # SP over the full fleet
+)
+
+# Per-arch gradient-accumulation for train_4k: keeps per-microbatch
+# activations (stored once per remat block) within v5e HBM. Verified via
+# compiled.memory_analysis() in the dry-run.
+TRAIN_MICROBATCHES = {
+    "llama-3.2-vision-90b": 8,
+    "gemma2-2b": 2,
+    "recurrentgemma-2b": 2,
+    "phi3-medium-14b": 4,
+    "gemma3-12b": 4,   # §Perf G1: 24.6 GB → fit
+    "moonshot-v1-16b-a3b": 2,
+    "deepseek-moe-16b": 2,
+    "mamba2-780m": 4,
+}
+
+
+# §Perf C1 (REFUTED, reverted): disabling FSDP for small models predicted a
+# ~23% collective cut (attributing the per-layer all-gathers to FSDP weight
+# gathers); measured −2.5% only — the gathers are model-axis attention weight
+# gathers inherent to replicated-attention small-head archs, not FSDP. FSDP
+# stays on uniformly (it also carries the long_500k table sharding).
+
+
+def rules_for(shape: ShapeConfig, cfg: ModelConfig = None) -> dict:
+    return LONG_CONTEXT_RULES if shape.name == "long_500k" else DEFAULT_RULES
+
+
+@dataclasses.dataclass
+class DryRunCase:
+    arch: str
+    shape: str
+    fn: Callable                   # positional-args step function
+    arg_structs: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    donate: Tuple[int, ...] = ()
+    out_shardings: Any = None      # None → let GSPMD infer
+
+
+def _shardings(tree_specs, mesh: Mesh, rules: dict):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, to_physical(s, mesh, rules)),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, dict))
+
+
+def build_case(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               tc: Optional[TrainConfig] = None) -> DryRunCase:
+    if tc is None:
+        tc = TrainConfig(microbatches=TRAIN_MICROBATCHES.get(cfg.name, 1))
+    rules = rules_for(shape, cfg)
+    max_seq = shape.seq_len if cfg.is_encoder_decoder else 0
+
+    if shape.kind == "train":
+        schema = S.state_schema(cfg, tc, max_seq=max_seq)
+        state_structs = param_structs(schema)
+        state_shard = _shardings(param_logical_specs(schema), mesh, rules)
+        b_structs = S.batch_structs(cfg, shape)
+        b_shard = _shardings(S.batch_logical_specs(cfg), mesh, rules)
+        fn = S.make_train_step(cfg, tc, mesh=mesh,
+                               param_shardings=state_shard["params"])
+        return DryRunCase(cfg.name, shape.name, fn,
+                          (state_structs, b_structs),
+                          (state_shard, b_shard), donate=(0,))
+
+    # serving lowers with bf16 params (production deployment dtype)
+    import jax.numpy as jnp
+    from repro.common.schema import tree_map_defs
+    raw = S.T.model_schema(cfg, max_seq=max_seq)
+    bf16 = tree_map_defs(
+        lambda d: dataclasses.replace(d, dtype=jnp.bfloat16)
+        if d.dtype == jnp.float32 else d, raw)
+    pschema = {"params": bf16}
+    p_structs = param_structs(pschema)["params"]
+    p_shard = _shardings(param_logical_specs(pschema), mesh, rules)["params"]
+
+    tok_spec, cache_spec, pos_spec = S.decode_logical_specs(cfg, shape)
+    cache_shard = _shardings(cache_spec, mesh, rules)
+
+    if shape.kind == "prefill":
+        b_structs = S.batch_structs(cfg, shape)
+        # prefill has no labels input
+        b_structs.pop("labels")
+        b_spec = S.batch_logical_specs(cfg)
+        b_spec.pop("labels")
+        b_shard = _shardings(b_spec, mesh, rules)
+        fn = S.make_prefill_step(cfg, cache_len=shape.seq_len, mesh=mesh)
+        # the built cache must come out SHARDED like the decode input cache
+        # (otherwise GSPMD materializes replicated multi-GB cache outputs)
+        logits_shard = _shardings(("batch", None), mesh, rules)
+        return DryRunCase(cfg.name, shape.name, fn,
+                          (p_structs, b_structs), (p_shard, b_shard),
+                          out_shardings=(logits_shard, cache_shard))
+
+    if shape.kind == "decode":
+        tok, caches, pos = S.decode_structs(cfg, shape)
+        shard = _shardings({"t": tok_spec, "p": pos_spec}, mesh, rules)
+        fn = S.make_decode_step(cfg, mesh=mesh)
+        logits_shard = _shardings(("batch", None), mesh, rules)
+        return DryRunCase(cfg.name, shape.name, fn,
+                          (p_structs, tok, caches, pos),
+                          (p_shard, shard["t"], cache_shard, shard["p"]),
+                          donate=(2,),
+                          out_shardings=(logits_shard, cache_shard))
+
+    raise ValueError(shape.kind)

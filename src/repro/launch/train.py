@@ -1,0 +1,83 @@
+"""Training launcher.
+
+Two modes:
+  --dry-run     lower+compile the production (16,16)/(2,16,16) case (no data)
+  (default)     actually train a --reduced config on the local devices with
+                the full fault-tolerant loop (checkpoint/resume/straggler)
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --shape train_4k --dry-run
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --reduced --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced same-family config locally")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        # separate process: the 512-device flag must precede jax init
+        import subprocess
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape,
+               "--mesh", "multi" if args.multi_pod else "single"]
+        return subprocess.call(cmd, env={
+            **os.environ,
+            "PYTHONPATH": os.pathsep.join(
+                [os.path.join(os.path.dirname(__file__), "..", ".."),
+                 os.environ.get("PYTHONPATH", "")])})
+
+    import jax
+    from repro import configs
+    from repro.checkpoint import CheckpointManager
+    from repro.common.config import TrainConfig
+    from repro.data import TokenStream
+    from repro.runtime import PreemptionGuard, StepMonitor
+    from repro.train import init_state, make_train_step, train_loop
+
+    cfg = configs.smoke_config(args.arch) if args.reduced else configs.get_config(args.arch)
+    tc = TrainConfig(learning_rate=args.lr, warmup_steps=max(args.steps // 10, 1),
+                     total_steps=args.steps, grad_compression=args.grad_compression)
+    stream = TokenStream(
+        vocab=cfg.vocab, batch=args.batch, seq_len=args.seq_len,
+        with_frames=cfg.enc_seq if cfg.is_encoder_decoder else 0,
+        with_vision=cfg.vision_seq, d_model=cfg.d_model)
+    state = init_state(cfg, tc, jax.random.PRNGKey(tc.seed), max_seq=args.seq_len)
+    step = jax.jit(make_train_step(cfg, tc))
+
+    import jax.numpy as jnp
+    def batches():
+        for b in stream:
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    state, n = train_loop(step_fn=step, state=state, batches=batches(),
+                          total_steps=args.steps, ckpt=ckpt, ckpt_every=25,
+                          monitor=StepMonitor(), guard=PreemptionGuard(),
+                          log_every=10)
+    print(f"finished at step {n}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

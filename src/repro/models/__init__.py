@@ -1,0 +1,13 @@
+from repro.models.transformer import (
+    decode_step,
+    loss_fn,
+    model_schema,
+    prefill,
+    stack_cache_schema_for,
+    stack_layout,
+)
+
+__all__ = [
+    "decode_step", "loss_fn", "model_schema", "prefill",
+    "stack_cache_schema_for", "stack_layout",
+]

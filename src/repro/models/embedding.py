@@ -1,0 +1,138 @@
+"""Vocab embedding with the CGTrans dataflow (DESIGN §2, §5).
+
+The table is sharded over the ``model`` axis on the vocab dim — the "storage
+tier". Two lookup dataflows:
+
+* **cgtrans** (shard_map): every shard resolves only the ids it *owns*
+  (CAM-match analogue: range-mask), gathers locally, and the only cross-shard
+  traffic is a psum of the (B,S,D) *result* — aggregated-before-transmitted.
+  The VJP is the exact mirror: output grads are scatter-added **at the owner
+  shard** (the paper's in-SSD aggregation), no raw table movement.
+* **baseline** (plain ``take`` on the sharded table): GSPMD resolves the
+  gather by materializing/collecting table shards — the "ship raw features
+  over the bus" dataflow. Kept for the collective-byte comparison benches.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.logical import batch_axes
+
+
+def _model_axis(mesh: Optional[Mesh]) -> Optional[str]:
+    if mesh is not None and "model" in mesh.axis_names and mesh.shape["model"] > 1:
+        return "model"
+    return None
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, *, mesh: Optional[Mesh] = None,
+                 cgtrans: bool = True, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """ids: (B, S) int32 → (B, S, D)."""
+    axis = _model_axis(mesh)
+    if not cgtrans or axis is None:
+        return jnp.take(table, ids, axis=0).astype(compute_dtype)
+
+    n = mesh.shape[axis]
+    V = table.shape[0]
+    if V % n:
+        return jnp.take(table, ids, axis=0).astype(compute_dtype)
+    shard = V // n
+    dp = batch_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if dp and ids.shape[0] % dp_size:
+        dp = ()   # replicate ids when the (micro)batch doesn't split evenly
+
+    def local(table_shard, ids_blk):
+        lo = lax.axis_index(axis) * shard
+        rel = ids_blk - lo
+        ok = (rel >= 0) & (rel < shard)
+        rel = jnp.clip(rel, 0, shard - 1)
+        part = jnp.take(table_shard, rel, axis=0).astype(compute_dtype)
+        part = part * ok[..., None].astype(compute_dtype)
+        return lax.psum(part, axis)          # compressed transmission: (B,S,D)
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(dp if dp else None, None)),
+        out_specs=P(dp if dp else None, None, None),
+    )(table, ids)
+
+
+def logits_matmul(x: jax.Array, table: jax.Array, *, softcap: float = 0.0,
+                  valid_vocab: int = 0) -> jax.Array:
+    """(…, D) @ (V, D)ᵀ → (…, V), f32 accumulation.
+
+    ``valid_vocab``: mask padded table rows (≥ valid_vocab) to -inf so the
+    vocab-padding used for even sharding never leaks into softmax/sampling.
+    """
+    logits = jnp.einsum("...d,vd->...v", x, table.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if valid_vocab and valid_vocab < table.shape[0]:
+        pad_mask = jnp.arange(table.shape[0]) >= valid_vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+def chunked_softmax_xent(
+    x: jax.Array,          # (B, S, D) final hiddens
+    table: jax.Array,      # (V, D) tied output embedding
+    labels: jax.Array,     # (B, S) int32, -1 = padding
+    *,
+    softcap: float = 0.0,
+    max_chunk: int = 512,
+    byte_budget: int = 1 << 28,
+    valid_vocab: int = 0,
+    mesh: Optional[Mesh] = None,
+):
+    """Sequence-chunked CE so (B,S,V) f32 logits never materialize.
+
+    Returns (sum_loss, n_valid). Chunk size adapts so the PER-DEVICE logits
+    block (B/dp · chunk · V/tp · 4 bytes) stays under ``byte_budget`` — using
+    global shapes here once produced a pathological 2048-step scan whose
+    per-step embedding-grad all-reduces dominated the whole model's
+    collectives. Each chunk step is rematerialized (logits recomputed in the
+    backward) so the scan stores only the small per-chunk hiddens.
+    """
+    B, S, D = x.shape
+    V = table.shape[0]
+    dp = tp = 1
+    if mesh is not None:
+        from repro.common.logical import dp_size
+        dp = dp_size(mesh)
+        tp = mesh.shape.get("model", 1) if "model" in mesh.axis_names else 1
+    dev_bytes = max((B // max(dp, 1)) * (V // max(tp, 1)) * 4, 1)
+    chunk = max(1, min(max_chunk, byte_budget // dev_bytes))
+    while S % chunk:
+        chunk -= 1
+    n = S // chunk
+    xc = jnp.moveaxis(x.reshape(B, n, chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def chunk_loss(xi, li):
+        logits = logits_matmul(xi, table, softcap=softcap,
+                               valid_vocab=valid_vocab)      # (B,chunk,V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+        valid = (li >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * valid), jnp.sum(valid)
+
+    def step(carry, inp):
+        loss_sum, cnt = carry
+        l, c = chunk_loss(*inp)
+        return (loss_sum + l, cnt + c), None
+
+    (loss_sum, cnt), _ = lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)), (xc, lc))
+    return loss_sum, cnt

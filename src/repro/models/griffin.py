@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+a_t = exp(-c · softplus(Λ) ⊙ sigmoid(r_t)),   c = 8
+
+Full-sequence path uses ``lax.associative_scan`` (log-depth on TPU); decode is
+a single fused update. The temporal block wraps the RG-LRU with the Griffin
+gating: conv1d(4) on the x-branch, GeLU gate branch, output projection.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.config import ModelConfig
+from repro.common.schema import ParamDef
+
+_C = 8.0
+
+
+def rglru_schema(cfg: ModelConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    return {
+        "w_x": ParamDef((D, W), ("embed", "lru"), init="lecun"),
+        "w_gate": ParamDef((D, W), ("embed", "lru"), init="lecun"),
+        "conv_w": ParamDef((cfg.conv_kernel, W), (None, "lru"), init="lecun"),
+        "conv_b": ParamDef((W,), ("lru",), init="zeros"),
+        "w_rec_gate": ParamDef((W, W), ("lru", None), init="lecun"),
+        "w_in_gate": ParamDef((W, W), ("lru", None), init="lecun"),
+        "lam": ParamDef((W,), ("lru",), init="custom", custom="rglru_lambda"),
+        "w_out": ParamDef((W, D), ("lru", "embed"), init="lecun"),
+    }
+
+
+def rglru_cache_schema(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    W = cfg.lru_width or cfg.d_model
+    return {
+        "h": ParamDef((batch, W), ("batch", "lru"), init="zeros", dtype=jnp.float32),
+        "conv": ParamDef((batch, cfg.conv_kernel - 1, W), ("batch", None, "lru"),
+                         init="zeros", dtype=jnp.float32),
+    }
+
+
+def _gates(p, xb):
+    """Recurrence gate a and input gate i from the x-branch. float32."""
+    x32 = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x32, p["w_rec_gate"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x32, p["w_in_gate"].astype(jnp.float32)))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * x32)
+
+
+def _conv(xb, w, b, history=None):
+    K = w.shape[0]
+    B, S, W = xb.shape
+    pad = (jnp.zeros((B, K - 1, W), xb.dtype) if history is None
+           else history.astype(xb.dtype))
+    xp = jnp.concatenate([pad, xb], axis=1)
+    out = sum(xp[:, i:i + S] * w[i].astype(xb.dtype) for i in range(K))
+    return out + b.astype(xb.dtype), xp[:, -(K - 1):]
+
+
+def rglru_apply(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig,
+                init_h=None, conv_history=None, return_cache: bool = False):
+    """Full-sequence temporal block. x: (B,S,D) → (B,S,D)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(x.dtype)),
+                       approximate=True)
+    xb, hist = _conv(xb, p["conv_w"], p["conv_b"], conv_history)
+    a, bx = _gates(p, xb)                      # (B,S,W) f32 each
+
+    if init_h is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * init_h.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, h = lax.associative_scan(combine, (a, bx), axis=1)
+    y = (h.astype(x.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(x.dtype))
+    if return_cache:
+        return out, {"h": h[:, -1].astype(jnp.float32), "conv": hist.astype(jnp.float32)}
+    return out
+
+
+def rglru_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, jax.Array],
+                 cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-step update. x: (B,1,D)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype))[:, 0]
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(x.dtype))[:, 0],
+                       approximate=True)
+    K = p["conv_w"].shape[0]
+    hist = jnp.concatenate([cache["conv"].astype(xb.dtype), xb[:, None, :]], axis=1)
+    xb = jnp.sum(hist * p["conv_w"].astype(xb.dtype)[None], axis=1) + p["conv_b"].astype(xb.dtype)
+    a, bx = _gates(p, xb)
+    h = a * cache["h"] + bx
+    y = h.astype(x.dtype) * gate
+    out = jnp.einsum("bw,wd->bd", y, p["w_out"].astype(x.dtype))[:, None, :]
+    return out, {"h": h, "conv": hist[:, 1:].astype(jnp.float32)}

@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN (deepseek-moe / moonshot style).
+
+Capacity-based GShard-style dispatch expressed as einsums so GSPMD partitions
+experts over the ``model`` axis (EP). The combine einsum reduces the expert
+axis *before* any cross-shard movement — each expert shard emits partially
+combined token outputs and the inter-shard traffic is one psum of the
+**combined** (B,S,D) tensor. That is exactly the paper's CGTrans dataflow
+(aggregate at the owner, transmit compressed): bytes ∝ tokens·D instead of
+tokens·top_k·D. ``repro.core.cgtrans`` measures the two variants.
+
+Shared experts (deepseek: 2) run as an always-on dense FFN.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.common.schema import ParamDef
+from repro.models import layers
+
+
+def moe_schema(cfg: ModelConfig) -> Dict[str, Any]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s: Dict[str, Any] = {
+        "router": ParamDef((D, E), ("embed", None), init="lecun", dtype=jnp.float32),
+        "w_gate": ParamDef((E, D, F), ("experts", "embed", None), init="lecun"),
+        "w_up": ParamDef((E, D, F), ("experts", "embed", None), init="lecun"),
+        "w_down": ParamDef((E, F, D), ("experts", None, "embed"), init="lecun"),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = layers.mlp_schema(cfg, cfg.d_ff * cfg.n_shared_experts)
+    return s
+
+
+def _capacity(tokens_per_group: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(tokens_per_group * top_k * factor / n_experts) + 1
+    return max(c, top_k)
+
+
+def route(router_w: jax.Array, x: jax.Array, cfg: ModelConfig):
+    """Top-k routing. x: (..., D) → (weights (..., k), ids (..., k), aux)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+    # Switch-style load-balance aux loss: E * Σ_e (mean router prob)·(routed fraction).
+    E = cfg.n_experts
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_ids.reshape(-1), E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return top_p, top_ids, aux
+
+
+def moe_apply(
+    p: Dict[str, Any],
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    capacity_factor: float = 1.25,
+    group_size: int = 512,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    t = min(group_size, T)
+    G = T // t
+    xf = x.reshape(G, t, D)
+
+    top_p, top_ids, aux = route(p["router"], xf, cfg)  # (G,t,K)
+
+    C = _capacity(t, E, K, capacity_factor)
+    # position of each (token, k) slot within its expert queue, per group
+    e_onehot = jax.nn.one_hot(top_ids, E, dtype=jnp.int32)          # (G,t,K,E)
+    flat = e_onehot.reshape(G, t * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat                       # (G,t*K,E)
+    pos = jnp.sum(pos_in_e.reshape(G, t, K, E) * e_onehot, axis=-1)  # (G,t,K)
+    keep = pos < C
+    w = top_p * keep.astype(top_p.dtype)
+
+    # dispatch tensor (G,t,E,C) — bf16, sharded on E over "model"
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=x.dtype)[..., :C]
+    disp = jnp.einsum("gtke,gtkc->gtec", e_onehot.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", e_onehot.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+    # gather expert inputs, run experts, combine (expert axis reduced in-place)
+    xin = jnp.einsum("gtec,gtd->gecd", disp, xf)                     # (G,E,C,D)
+    g = layers._act(jnp.einsum("gecd,edf->gecf", xin, p["w_gate"].astype(x.dtype)), cfg.act)
+    u = jnp.einsum("gecd,edf->gecf", xin, p["w_up"].astype(x.dtype))
+    xout = jnp.einsum("gecf,efd->gecd", g * u, p["w_down"].astype(x.dtype))
+    out = jnp.einsum("gecd,gtec->gtd", xout, comb)                   # reduces E first
+
+    out = out.reshape(B, S, D)
+    if "shared" in p:
+        out = out + layers.mlp_apply(p["shared"], x, cfg)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,234 @@
+"""Mamba2 mixer via SSD (state-space duality), chunked matmul formulation.
+
+The SSD algorithm (Dao & Gu, arXiv:2405.21060) computes the selective-SSM
+recurrence as block matmuls: intra-chunk "attention-like" term + inter-chunk
+recurrent state carry. This is the TPU-friendly form (MXU matmuls + one short
+scan over chunks) — exactly the kind of rethink DESIGN §2 calls for.
+
+Sharding layout (TP over "ssm_heads" = the model axis): z/x/dt projections and
+the x-conv are sharded on d_inner/heads; B and C (state projections, N=128)
+are replicated — so every slice in the layer is shard-aligned and the only
+per-layer collective is the out_proj contraction psum (verified in the
+dry-run HLO; a fused in_proj would cost ~3 GB/layer of resharding instead).
+
+Layout: d_inner = expand·d_model, H = d_inner/head_dim heads, state N,
+single B/C group (n_groups = 1, matching mamba2-780m).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.config import ModelConfig
+from repro.common.schema import ParamDef
+from repro.models.layers import rms_norm
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssd_schema(cfg: ModelConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    d_inner, H, P_, N = dims(cfg)
+    K = cfg.conv_kernel
+    return {
+        "z_proj": ParamDef((D, d_inner), ("embed", "ssm_heads"), init="lecun"),
+        "x_proj": ParamDef((D, d_inner), ("embed", "ssm_heads"), init="lecun"),
+        "b_proj": ParamDef((D, N), ("embed", None), init="lecun"),
+        "c_proj": ParamDef((D, N), ("embed", None), init="lecun"),
+        "dt_proj": ParamDef((D, H), ("embed", "ssm_heads"), init="lecun"),
+        "conv_x_w": ParamDef((K, d_inner), (None, "ssm_heads"), init="lecun"),
+        "conv_x_b": ParamDef((d_inner,), ("ssm_heads",), init="zeros"),
+        "conv_b_w": ParamDef((K, N), (None, None), init="lecun"),
+        "conv_b_b": ParamDef((N,), (None,), init="zeros"),
+        "conv_c_w": ParamDef((K, N), (None, None), init="lecun"),
+        "conv_c_b": ParamDef((N,), (None,), init="zeros"),
+        "a_log": ParamDef((H,), ("ssm_heads",), init="custom", custom="ssm_a_log"),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="custom", custom="ssm_dt_bias"),
+        "d_skip": ParamDef((H,), ("ssm_heads",), init="ones"),
+        "out_norm": ParamDef((d_inner,), ("ssm_heads",), init="ones"),
+        "out_proj": ParamDef((d_inner, D), ("ssm_heads", "embed"), init="lecun"),
+    }
+
+
+def ssd_cache_schema(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    d_inner, H, P_, N = dims(cfg)
+    K = cfg.conv_kernel
+    return {
+        "state": ParamDef((batch, H, P_, N), ("batch", "ssm_heads", None, None),
+                          init="zeros", dtype=jnp.float32),
+        "conv_x": ParamDef((batch, K - 1, d_inner), ("batch", None, "ssm_heads"),
+                           init="zeros", dtype=jnp.float32),
+        "conv_b": ParamDef((batch, K - 1, N), ("batch", None, None),
+                           init="zeros", dtype=jnp.float32),
+        "conv_c": ParamDef((batch, K - 1, N), ("batch", None, None),
+                           init="zeros", dtype=jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, history=None,
+                 act: bool = True):
+    """Depthwise causal conv along seq. x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    if history is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    out = out + b.astype(x.dtype)
+    if act:
+        out = jax.nn.silu(out)
+    return out, xp[:, -(K - 1):]
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD: one lax.scan over chunks (state carried between chunks).
+
+    Per chunk: an intra-chunk attention-like matmul term + the contribution of
+    the carried state. Memory stays O(L²·H) per step; the recurrence between
+    chunks is inherently serial, and the per-chunk matmuls are the MXU work.
+
+    x: (B,S,H,P)  dt: (B,S,H) post-softplus f32  A: (H,) negative
+    Bm, Cm: (B,S,N) single group.
+    Returns y: (B,S,H,P) f32, final state (B,H,P,N) f32.
+    """
+    Bsz, S, H, P_ = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    S_orig = S
+    if S % L:
+        # pad with dt=0 steps: zero dt ⇒ no state update and no output weight,
+        # so padding is exact (not approximate).
+        pad = L - S % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nC = S // L
+    xc = jnp.moveaxis(x.reshape(Bsz, nC, L, H, P_), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nC, L, H), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(Bsz, nC, L, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(Bsz, nC, L, N), 1, 0)
+    li = jnp.arange(L)
+    causal = (li[:, None] >= li[None, :])[None, :, :, None]  # (1,L,L,1)
+    s0 = (jnp.zeros((Bsz, H, P_, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        xi, dti, Bi, Ci = inp                               # per-chunk slices
+        dA = dti * A[None, None, :]                         # (B,L,H) ≤ 0, f32
+        cum = jnp.cumsum(dA, axis=1)
+        total = cum[:, -1, :]                               # (B,H)
+        # intra-chunk: att[l,m] = C_l·B_m · exp(cum_l - cum_m) · dt_m, l ≥ m
+        cb = jnp.einsum("bln,bmn->blm", Ci, Bi,
+                        preferred_element_type=jnp.float32)  # (B,L,L)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]       # (B,L,L,H)
+        # mask BEFORE exp: exp(-inf)=0 keeps fwd and grad finite (exp of the
+        # (positive) non-causal entries would overflow and NaN the vjp).
+        decay = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+        att = (cb[..., None] * decay * dti[:, None, :, :]).astype(xi.dtype)
+        y = jnp.einsum("blmh,bmhp->blhp", att, xi,
+                       preferred_element_type=jnp.float32)
+        # carried-state contribution: y_off_l = C_l · (exp(cum_l) ⊙ S_in)
+        y = y + jnp.einsum("bln,blh,bhpn->blhp", Ci.astype(jnp.float32),
+                           jnp.exp(cum), s)
+        # state update: S_out = exp(total)·S_in + Σ_m exp(total-cum_m)·dt_m·B_m⊗x_m
+        dstate = jnp.exp(total[:, None, :] - cum) * dti     # (B,L,H)
+        cs = jnp.einsum("bln,blh,blhp->bhpn", Bi.astype(jnp.float32), dstate,
+                        xi.astype(jnp.float32))
+        s = s * jnp.exp(total)[:, :, None, None] + cs
+        # stack chunk outputs in compute dtype (bf16): halves the dominant
+        # live buffer of the layer (the f32 accumulation already happened
+        # inside the einsums via preferred_element_type).
+        return s, y.astype(xi.dtype)
+
+    s_final, ys = lax.scan(step, s0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P_)
+    return y[:, :S_orig].astype(jnp.float32), s_final
+
+
+def _proj(x, w):
+    return jnp.einsum("bsd,dk->bsk", x, w.astype(x.dtype))
+
+
+def ssd_apply(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig,
+              init_state=None, conv_history=None, return_cache: bool = False):
+    """Full-sequence mamba2 mixer. x: (B,S,D) → (B,S,D)."""
+    d_inner, H, P_, N = dims(cfg)
+    B, S, D = x.shape
+    z = _proj(x, p["z_proj"])
+    xs = _proj(x, p["x_proj"])
+    Bm = _proj(x, p["b_proj"])
+    Cm = _proj(x, p["c_proj"])
+    dt = _proj(x, p["dt_proj"])
+    hx = hb = hc = None
+    if conv_history is not None:
+        hx, hb, hc = (conv_history["conv_x"], conv_history["conv_b"],
+                      conv_history["conv_c"])
+    xs, nhx = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"], hx)
+    Bm, nhb = _causal_conv(Bm, p["conv_b_w"], p["conv_b_b"], hb)
+    Cm, nhc = _causal_conv(Cm, p["conv_c_w"], p["conv_c_b"], hc)
+    xs = xs.reshape(B, S, H, P_)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk, init_state)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps, False)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_cache:
+        cache = {"state": state,
+                 "conv_x": nhx.astype(jnp.float32),
+                 "conv_b": nhb.astype(jnp.float32),
+                 "conv_c": nhc.astype(jnp.float32)}
+        return out, cache
+    return out
+
+
+def _conv_step(v, hist, w, b, act: bool = True):
+    """Single-token depthwise conv against history. v: (B,C)."""
+    full = jnp.concatenate([hist.astype(v.dtype), v[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.sum(full * w.astype(v.dtype)[None], axis=1) + b.astype(v.dtype)
+    if act:
+        out = jax.nn.silu(out)
+    return out, full[:, 1:]
+
+
+def ssd_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, jax.Array], cfg: ModelConfig):
+    """Single-token recurrent update. x: (B,1,D)."""
+    d_inner, H, P_, N = dims(cfg)
+    B = x.shape[0]
+    x0 = x[:, 0]
+    z = jnp.einsum("bd,dk->bk", x0, p["z_proj"].astype(x.dtype))
+    xs = jnp.einsum("bd,dk->bk", x0, p["x_proj"].astype(x.dtype))
+    Bm = jnp.einsum("bd,dk->bk", x0, p["b_proj"].astype(x.dtype))
+    Cm = jnp.einsum("bd,dk->bk", x0, p["c_proj"].astype(x.dtype))
+    dt = jnp.einsum("bd,dk->bk", x0, p["dt_proj"].astype(x.dtype))
+    xs, nhx = _conv_step(xs, cache["conv_x"], p["conv_x_w"], p["conv_x_b"])
+    Bm, nhb = _conv_step(Bm, cache["conv_b"], p["conv_b_w"], p["conv_b_b"])
+    Cm, nhc = _conv_step(Cm, cache["conv_c"], p["conv_c_w"], p["conv_c_b"])
+    xs = xs.reshape(B, H, P_)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])   # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dA = jnp.exp(dt_ * A[None, :])                                          # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt_, Bm, xs.astype(jnp.float32))
+    state = cache["state"] * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state)                               # (B,H,P)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps, False)
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"].astype(x.dtype))[:, None, :]
+    return out, {"state": state, "conv_x": nhx.astype(jnp.float32),
+                 "conv_b": nhb.astype(jnp.float32),
+                 "conv_c": nhc.astype(jnp.float32)}

@@ -1,0 +1,488 @@
+"""Model assembly: block-pattern scanned stacks for all assigned families.
+
+The per-layer heterogeneity (local/global attention, cross-attn, MoE-vs-dense,
+recurrent-vs-attn) is expressed as a repeating *pattern*; parameters are
+stacked per pattern-position over block repetitions and the stack runs under
+one ``lax.scan`` (HLO size O(pattern), not O(n_layers) — required to compile
+100-layer 90B configs on one CPU). Remainder layers and MoE first-k-dense
+prefixes are unrolled outside the scan.
+
+Three entry points per model: ``loss_fn`` (train), ``prefill`` (logits +
+populated cache), ``decode_step`` (one token against the cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh
+
+from repro.common.config import ModelConfig
+from repro.common.schema import ParamDef, stack as stack_schema
+from repro.models import griffin, layers, moe, ssm
+from repro.models.embedding import chunked_softmax_xent, embed_lookup, logits_matmul
+from repro.models.layers import LayerCtx, apply_norm, norm_schema, rope_tables
+
+
+def _cdt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# per-layer schema / apply / prefill / decode, dispatched on kind
+# ---------------------------------------------------------------------------
+
+def layer_schema(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    n = lambda: norm_schema(cfg, cfg.d_model)
+    if kind == "ssd":
+        return {"norm": n(), "mixer": ssm.ssd_schema(cfg)}
+    if kind == "rglru":
+        s = {"norm": n(), "mixer": griffin.rglru_schema(cfg),
+             "norm2": n(), "mlp": layers.mlp_schema(cfg)}
+        return s
+    if kind in ("attn", "local", "enc"):
+        dff = cfg.d_ff_dense or cfg.d_ff
+        is_prefix_dense = kind == "attn" and cfg.first_k_dense > 0
+        s = {"norm": n(),
+             "attn": layers.attn_schema(cfg),
+             "norm2": n(),
+             "mlp": layers.mlp_schema(cfg, dff if is_prefix_dense else cfg.d_ff)}
+        if cfg.post_norms:
+            s["post_attn_norm"] = n()
+            s["post_mlp_norm"] = n()
+        return s
+    if kind == "moe":
+        s = {"norm": n(), "attn": layers.attn_schema(cfg),
+             "norm2": n(), "moe": moe.moe_schema(cfg)}
+        return s
+    if kind == "cross":
+        return {"norm": n(),
+                "attn": layers.attn_schema(cfg, cross=True, gated=True),
+                "norm2": n(),
+                "mlp": layers.mlp_schema(cfg, gated_tag=True)}
+    if kind == "dec":
+        return {"norm": n(), "self_attn": layers.attn_schema(cfg),
+                "norm_x": n(), "cross_attn": layers.attn_schema(cfg, cross=True),
+                "norm2": n(), "mlp": layers.mlp_schema(cfg)}
+    raise ValueError(kind)
+
+
+def layer_cache_schema(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                       tp: int = 16) -> Dict[str, Any]:
+    if kind == "ssd":
+        return {"mixer": ssm.ssd_cache_schema(cfg, batch)}
+    if kind == "rglru":
+        return {"mixer": griffin.rglru_cache_schema(cfg, batch)}
+    if kind in ("attn", "local", "moe"):
+        return {"attn": layers.attn_cache_schema(cfg, batch, seq_len, kind=kind, tp=tp)}
+    if kind == "cross":
+        return {"attn": layers.cross_cache_schema(cfg, batch, cfg.vision_seq, tp=tp)}
+    if kind == "dec":
+        return {"self_attn": layers.attn_cache_schema(cfg, batch, seq_len, kind="attn", tp=tp),
+                "cross_attn": layers.cross_cache_schema(cfg, batch, cfg.enc_seq, tp=tp)}
+    raise ValueError(kind)
+
+
+def _residual(x, delta, p, cfg, post_key):
+    if cfg.post_norms and post_key in p:
+        delta = apply_norm(p[post_key], delta, cfg)
+    return x + delta
+
+
+def layer_apply(cfg: ModelConfig, kind: str, p, x, ctx: LayerCtx):
+    """Full-sequence layer. Returns (x, aux)."""
+    aux = jnp.float32(0.0)
+    if kind == "ssd":
+        h = apply_norm(p["norm"], x, cfg)
+        return x + ssm.ssd_apply(p["mixer"], h, cfg), aux
+    if kind == "rglru":
+        h = apply_norm(p["norm"], x, cfg)
+        x = x + griffin.rglru_apply(p["mixer"], h, cfg)
+        h = apply_norm(p["norm2"], x, cfg)
+        return x + layers.mlp_apply(p["mlp"], h, cfg), aux
+    if kind in ("attn", "local", "enc"):
+        h = apply_norm(p["norm"], x, cfg)
+        x = _residual(x, layers.attn_apply(p["attn"], h, ctx, kind=kind), p, cfg, "post_attn_norm")
+        h = apply_norm(p["norm2"], x, cfg)
+        return _residual(x, layers.mlp_apply(p["mlp"], h, cfg), p, cfg, "post_mlp_norm"), aux
+    if kind == "moe":
+        h = apply_norm(p["norm"], x, cfg)
+        x = x + layers.attn_apply(p["attn"], h, ctx, kind="attn")
+        h = apply_norm(p["norm2"], x, cfg)
+        out, aux = moe.moe_apply(p["moe"], h, cfg)
+        return x + out, aux
+    if kind == "cross":
+        h = apply_norm(p["norm"], x, cfg)
+        x = x + layers.cross_attn_apply(p["attn"], h, ctx)
+        h = apply_norm(p["norm2"], x, cfg)
+        return x + layers.mlp_apply(p["mlp"], h, cfg), aux
+    if kind == "dec":
+        h = apply_norm(p["norm"], x, cfg)
+        x = x + layers.attn_apply(p["self_attn"], h, ctx, kind="attn")
+        h = apply_norm(p["norm_x"], x, cfg)
+        x = x + layers.cross_attn_apply(p["cross_attn"], h, ctx)
+        h = apply_norm(p["norm2"], x, cfg)
+        return x + layers.mlp_apply(p["mlp"], h, cfg), aux
+    raise ValueError(kind)
+
+
+def layer_prefill(cfg: ModelConfig, kind: str, p, x, ctx: LayerCtx, cache_len: int):
+    """Full-sequence layer that also emits the decode cache."""
+    if kind == "ssd":
+        h = apply_norm(p["norm"], x, cfg)
+        out, cache = ssm.ssd_apply(p["mixer"], h, cfg, return_cache=True)
+        return x + out, {"mixer": cache}
+    if kind == "rglru":
+        h = apply_norm(p["norm"], x, cfg)
+        out, cache = griffin.rglru_apply(p["mixer"], h, cfg, return_cache=True)
+        x = x + out
+        h = apply_norm(p["norm2"], x, cfg)
+        return x + layers.mlp_apply(p["mlp"], h, cfg), {"mixer": cache}
+    if kind in ("attn", "local"):
+        h = apply_norm(p["norm"], x, cfg)
+        a, cache = layers.attn_prefill(p["attn"], h, ctx, kind=kind, cache_len=cache_len)
+        x = _residual(x, a, p, cfg, "post_attn_norm")
+        h = apply_norm(p["norm2"], x, cfg)
+        return _residual(x, layers.mlp_apply(p["mlp"], h, cfg), p, cfg, "post_mlp_norm"), {"attn": cache}
+    if kind == "moe":
+        h = apply_norm(p["norm"], x, cfg)
+        a, cache = layers.attn_prefill(p["attn"], h, ctx, kind="attn", cache_len=cache_len)
+        x = x + a
+        h = apply_norm(p["norm2"], x, cfg)
+        out, _ = moe.moe_apply(p["moe"], h, cfg, capacity_factor=2.0)
+        return x + out, {"attn": cache}
+    if kind == "cross":
+        cache = layers.cross_build_cache(p["attn"], ctx.memory.astype(x.dtype), cfg)
+        h = apply_norm(p["norm"], x, cfg)
+        x = x + layers.cross_attn_apply(p["attn"], h, ctx)
+        h = apply_norm(p["norm2"], x, cfg)
+        return x + layers.mlp_apply(p["mlp"], h, cfg), {"attn": cache}
+    if kind == "dec":
+        h = apply_norm(p["norm"], x, cfg)
+        a, self_cache = layers.attn_prefill(p["self_attn"], h, ctx, kind="attn", cache_len=cache_len)
+        x = x + a
+        cross_cache = layers.cross_build_cache(p["cross_attn"], ctx.memory.astype(x.dtype), cfg)
+        h = apply_norm(p["norm_x"], x, cfg)
+        x = x + layers.cross_attn_apply(p["cross_attn"], h, ctx)
+        h = apply_norm(p["norm2"], x, cfg)
+        return (x + layers.mlp_apply(p["mlp"], h, cfg),
+                {"self_attn": self_cache, "cross_attn": cross_cache})
+    raise ValueError(kind)
+
+
+def layer_decode(cfg: ModelConfig, kind: str, p, x, cache, ctx: LayerCtx):
+    """One-token step. x: (B,1,D). Returns (x, new_cache)."""
+    if kind == "ssd":
+        h = apply_norm(p["norm"], x, cfg)
+        out, c = ssm.ssd_decode(p["mixer"], h, cache["mixer"], cfg)
+        return x + out, {"mixer": c}
+    if kind == "rglru":
+        h = apply_norm(p["norm"], x, cfg)
+        out, c = griffin.rglru_decode(p["mixer"], h, cache["mixer"], cfg)
+        x = x + out
+        h = apply_norm(p["norm2"], x, cfg)
+        return x + layers.mlp_apply(p["mlp"], h, cfg), {"mixer": c}
+    if kind in ("attn", "local"):
+        h = apply_norm(p["norm"], x, cfg)
+        a, c = layers.attn_decode(p["attn"], h, cache["attn"], ctx, kind=kind)
+        x = _residual(x, a, p, cfg, "post_attn_norm")
+        h = apply_norm(p["norm2"], x, cfg)
+        return _residual(x, layers.mlp_apply(p["mlp"], h, cfg), p, cfg, "post_mlp_norm"), {"attn": c}
+    if kind == "moe":
+        h = apply_norm(p["norm"], x, cfg)
+        a, c = layers.attn_decode(p["attn"], h, cache["attn"], ctx, kind="attn")
+        x = x + a
+        h = apply_norm(p["norm2"], x, cfg)
+        out, _ = moe.moe_apply(p["moe"], h, cfg, capacity_factor=2.0, group_size=64)
+        return x + out, {"attn": c}
+    if kind == "cross":
+        h = apply_norm(p["norm"], x, cfg)
+        a, c = layers.cross_attn_decode(p["attn"], h, cache["attn"], ctx)
+        x = x + a
+        h = apply_norm(p["norm2"], x, cfg)
+        return x + layers.mlp_apply(p["mlp"], h, cfg), {"attn": c}
+    if kind == "dec":
+        h = apply_norm(p["norm"], x, cfg)
+        a, sc = layers.attn_decode(p["self_attn"], h, cache["self_attn"], ctx, kind="attn")
+        x = x + a
+        h = apply_norm(p["norm_x"], x, cfg)
+        a, cc = layers.cross_attn_decode(p["cross_attn"], h, cache["cross_attn"], ctx)
+        x = x + a
+        h = apply_norm(p["norm2"], x, cfg)
+        return x + layers.mlp_apply(p["mlp"], h, cfg), {"self_attn": sc, "cross_attn": cc}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack layout: prefix (unrolled) + blocks (scanned) + suffix (unrolled)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StackLayout:
+    prefix: Tuple[str, ...]      # layer kinds, unrolled
+    pattern: Tuple[str, ...]     # one block of the scan
+    n_blocks: int
+    suffix: Tuple[str, ...]      # remainder layers, unrolled
+
+
+def stack_layout(cfg: ModelConfig) -> StackLayout:
+    kinds = cfg.layer_kinds()
+    pre = kinds[:cfg.first_k_dense]
+    body = kinds[cfg.first_k_dense:]
+    pattern = cfg.pattern * max(cfg.block_repeat, 1)
+    period = len(pattern)
+    if not cfg.scan_layers:
+        return StackLayout(tuple(kinds), pattern, 0, ())
+    n_blocks = len(body) // period
+    if n_blocks <= 1:  # no point scanning a single block
+        return StackLayout(tuple(kinds), pattern, 0, ())
+    suffix = body[n_blocks * period:]
+    return StackLayout(tuple(pre), pattern, n_blocks, tuple(suffix))
+
+
+def stack_schema_for(cfg: ModelConfig) -> Dict[str, Any]:
+    lay = stack_layout(cfg)
+    s: Dict[str, Any] = {}
+    for i, kind in enumerate(lay.prefix):
+        s[f"prefix_{i}"] = layer_schema(cfg, kind)
+    if lay.n_blocks:
+        block = {f"p{j}": layer_schema(cfg, k) for j, k in enumerate(lay.pattern)}
+        s["blocks"] = stack_schema(block, lay.n_blocks)
+    for i, kind in enumerate(lay.suffix):
+        s[f"suffix_{i}"] = layer_schema(cfg, kind)
+    return s
+
+
+def stack_cache_schema_for(cfg: ModelConfig, batch: int, seq_len: int,
+                           tp: int = 16) -> Dict[str, Any]:
+    lay = stack_layout(cfg)
+    s: Dict[str, Any] = {}
+    for i, kind in enumerate(lay.prefix):
+        s[f"prefix_{i}"] = layer_cache_schema(cfg, kind, batch, seq_len, tp)
+    if lay.n_blocks:
+        block = {f"p{j}": layer_cache_schema(cfg, k, batch, seq_len, tp)
+                 for j, k in enumerate(lay.pattern)}
+        s["blocks"] = stack_schema(block, lay.n_blocks)
+    for i, kind in enumerate(lay.suffix):
+        s[f"suffix_{i}"] = layer_cache_schema(cfg, kind, batch, seq_len, tp)
+    return s
+
+
+def _run_stack_apply(cfg: ModelConfig, params, x, ctx: LayerCtx):
+    lay = stack_layout(cfg)
+    aux = jnp.float32(0.0)
+    for i, kind in enumerate(lay.prefix):
+        x, a = layer_apply(cfg, kind, params[f"prefix_{i}"], x, ctx)
+        aux = aux + a
+
+    if lay.n_blocks:
+        def block_fn(carry, bp):
+            x, aux = carry
+            for j, kind in enumerate(lay.pattern):
+                x, a = layer_apply(cfg, kind, bp[f"p{j}"], x, ctx)
+                aux = aux + a
+            return (x, aux), None
+
+        if cfg.remat == "block":
+            block_fn = jax.checkpoint(block_fn, prevent_cse=False)
+        (x, aux), _ = lax.scan(block_fn, (x, aux), params["blocks"])
+
+    for i, kind in enumerate(lay.suffix):
+        x, a = layer_apply(cfg, kind, params[f"suffix_{i}"], x, ctx)
+        aux = aux + a
+    return x, aux
+
+
+def _run_stack_prefill(cfg: ModelConfig, params, x, ctx: LayerCtx, cache_len: int):
+    lay = stack_layout(cfg)
+    caches: Dict[str, Any] = {}
+    for i, kind in enumerate(lay.prefix):
+        x, c = layer_prefill(cfg, kind, params[f"prefix_{i}"], x, ctx, cache_len)
+        caches[f"prefix_{i}"] = c
+
+    if lay.n_blocks:
+        def block_fn(x, bp):
+            cs = {}
+            for j, kind in enumerate(lay.pattern):
+                x, c = layer_prefill(cfg, kind, bp[f"p{j}"], x, ctx, cache_len)
+                cs[f"p{j}"] = c
+            return x, cs
+
+        x, caches["blocks"] = lax.scan(block_fn, x, params["blocks"])
+
+    for i, kind in enumerate(lay.suffix):
+        x, c = layer_prefill(cfg, kind, params[f"suffix_{i}"], x, ctx, cache_len)
+        caches[f"suffix_{i}"] = c
+    return x, caches
+
+
+def _run_stack_decode(cfg: ModelConfig, params, x, caches, ctx: LayerCtx):
+    lay = stack_layout(cfg)
+    new: Dict[str, Any] = {}
+    for i, kind in enumerate(lay.prefix):
+        x, c = layer_decode(cfg, kind, params[f"prefix_{i}"], x, caches[f"prefix_{i}"], ctx)
+        new[f"prefix_{i}"] = c
+
+    if lay.n_blocks:
+        def block_fn(x, inp):
+            bp, bc = inp
+            cs = {}
+            for j, kind in enumerate(lay.pattern):
+                x, c = layer_decode(cfg, kind, bp[f"p{j}"], x, bc[f"p{j}"], ctx)
+                cs[f"p{j}"] = c
+            return x, cs
+
+        x, new["blocks"] = lax.scan(block_fn, x, (params["blocks"], caches["blocks"]))
+
+    for i, kind in enumerate(lay.suffix):
+        x, c = layer_decode(cfg, kind, params[f"suffix_{i}"], x, caches[f"suffix_{i}"], ctx)
+        new[f"suffix_{i}"] = c
+    return x, new
+
+
+# ---------------------------------------------------------------------------
+# whole-model schema
+# ---------------------------------------------------------------------------
+
+def model_schema(cfg: ModelConfig, *, max_seq: int = 0) -> Dict[str, Any]:
+    D = cfg.d_model
+    V = cfg.vocab_padded
+    s: Dict[str, Any] = {
+        "embed": {"table": ParamDef((V, D), ("vocab", "embed"),
+                                    init="normal", scale=1.0)},
+        "final_norm": norm_schema(cfg, D),
+        "stack": stack_schema_for(cfg),
+    }
+    if not cfg.tie_embeddings:
+        s["unembed"] = {"table": ParamDef((V, D), ("vocab", "embed"), init="lecun")}
+    if cfg.is_encoder_decoder:
+        enc_block = {f"p{j}": layer_schema(cfg, "enc") for j in range(1)}
+        s["encoder"] = {
+            "blocks": stack_schema(enc_block, cfg.n_enc_layers),
+            "norm": norm_schema(cfg, D),
+        }
+        s["dec_pos"] = {"table": ParamDef((max_seq or cfg.max_dec_pos or 448, D),
+                                          (None, "embed"), init="normal", scale=0.02)}
+    return s
+
+
+def _sincos_pos(S: int, D: int, dtype) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _make_ctx(cfg: ModelConfig, positions: jax.Array, memory=None, pos=None,
+              use_flash: bool = False, mesh=None) -> LayerCtx:
+    hd = cfg.hd
+    rope_l = rope_tables(positions, hd, cfg.rope_theta)
+    rope_g = (rope_tables(positions, hd, cfg.rope_theta_global)
+              if cfg.rope_theta_global else rope_l)
+    return LayerCtx(cfg=cfg, rope_local=rope_l, rope_global=rope_g,
+                    memory=memory, pos=pos, use_flash=use_flash, mesh=mesh)
+
+
+def _encode(cfg: ModelConfig, params, frames: jax.Array, use_flash: bool = False) -> jax.Array:
+    """Whisper encoder over stubbed frame embeddings (B, enc_seq, D)."""
+    x = frames.astype(_cdt(cfg))
+    x = x + _sincos_pos(x.shape[1], cfg.d_model, x.dtype)[None]
+    ctx = _make_ctx(cfg, jnp.arange(x.shape[1]), use_flash=use_flash)
+
+    def block_fn(x, bp):
+        x, _ = layer_apply(cfg, "enc", bp["p0"], x, ctx)
+        return x, None
+
+    x, _ = lax.scan(block_fn, x, params["encoder"]["blocks"])
+    return apply_norm(params["encoder"]["norm"], x, cfg)
+
+
+def _embed_tokens(cfg, params, tokens, mesh):
+    x = embed_lookup(params["embed"]["table"], tokens, mesh=mesh,
+                     cgtrans=cfg.cgtrans_embedding, compute_dtype=_cdt(cfg))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _memory_from_batch(cfg, params, batch, use_flash=False):
+    if cfg.is_encoder_decoder:
+        return _encode(cfg, params, batch["frames"], use_flash)
+    if cfg.vision_seq:
+        return batch["vision"]
+    return None
+
+
+def _unembed_table(cfg, params):
+    return params["unembed"]["table"] if not cfg.tie_embeddings else params["embed"]["table"]
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            *, mesh: Optional[Mesh] = None, use_flash: bool = False):
+    """batch: tokens (B,S), labels (B,S); + frames/vision for audio/vlm.
+
+    Returns (loss, metrics).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(cfg, params, tokens, mesh)
+    if cfg.is_encoder_decoder:
+        x = x + params["dec_pos"]["table"][:S].astype(x.dtype)[None]
+    memory = _memory_from_batch(cfg, params, batch, use_flash)
+    ctx = _make_ctx(cfg, jnp.arange(S), memory=memory, use_flash=use_flash, mesh=mesh)
+    x, aux = _run_stack_apply(cfg, params["stack"], x, ctx)
+    x = apply_norm(params["final_norm"], x, cfg)
+    loss_sum, cnt = chunked_softmax_xent(
+        x, _unembed_table(cfg, params), batch["labels"],
+        softcap=cfg.final_logit_softcap, valid_vocab=cfg.vocab, mesh=mesh)
+    loss = loss_sum / jnp.maximum(cnt, 1.0)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"loss": loss, "aux_loss": aux, "tokens": cnt}
+
+
+def prefill(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            *, cache_len: int, mesh: Optional[Mesh] = None, use_flash: bool = False):
+    """Full-sequence forward building the decode cache.
+
+    Returns (last_token_logits (B,V) f32, caches).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(cfg, params, tokens, mesh)
+    if cfg.is_encoder_decoder:
+        x = x + params["dec_pos"]["table"][:S].astype(x.dtype)[None]
+    memory = _memory_from_batch(cfg, params, batch, use_flash)
+    ctx = _make_ctx(cfg, jnp.arange(S), memory=memory, use_flash=use_flash, mesh=mesh)
+    x, caches = _run_stack_prefill(cfg, params["stack"], x, ctx, cache_len)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_matmul(x[:, -1], _unembed_table(cfg, params),
+                           softcap=cfg.final_logit_softcap,
+                           valid_vocab=cfg.vocab)
+    return logits, caches
+
+
+def decode_step(params, token: jax.Array, caches, pos: jax.Array, cfg: ModelConfig,
+                *, mesh: Optional[Mesh] = None):
+    """token: (B,1) int32; pos: scalar int32 (uniform static-batch decode).
+
+    Returns (logits (B,V) f32, new caches).
+    """
+    x = _embed_tokens(cfg, params, token, mesh)
+    if cfg.is_encoder_decoder:
+        x = x + params["dec_pos"]["table"][pos].astype(x.dtype)[None, None, :]
+    ctx = _make_ctx(cfg, pos[None] if pos.ndim == 0 else pos, pos=pos, mesh=mesh)
+    x, new_caches = _run_stack_decode(cfg, params["stack"], x, caches, ctx)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_matmul(x[:, -1], _unembed_table(cfg, params),
+                           softcap=cfg.final_logit_softcap,
+                           valid_vocab=cfg.vocab)
+    return logits, new_caches

@@ -1,0 +1,122 @@
+"""AdamW + cosine schedule + global-norm clipping + int8 error-feedback
+gradient compression (pure JAX, no optax dependency).
+
+Compression (``int8_ef``): gradients are per-leaf scale-quantized to int8
+before the cross-pod (DCN) reduction and the quantization residual is carried
+in optimizer state and re-added next step (error feedback), so the long-run
+bias vanishes. This is the standard distributed-optimization trick for
+bandwidth-bound DCN all-reduces; the quantize→(reduce)→dequantize pair lives
+inside the jitted step so XLA schedules it with the collective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+
+
+def cosine_lr(step: jax.Array, tc: TrainConfig) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = tc.min_lr_ratio + (1 - tc.min_lr_ratio) * cos
+    return tc.learning_rate * warm * scale
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+# --- int8 error-feedback compression ---------------------------------------
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, residual):
+    """Returns (dequantized grads as transmitted, new residual)."""
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, s = quantize_int8(g32)
+        deq = q.astype(jnp.float32) * s
+        return deq.astype(g.dtype), (g32 - deq).astype(jnp.float32)
+
+    flat = jax.tree.map(one, grads, residual)
+    return (jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple)),
+            jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple)))
+
+
+# --- AdamW ------------------------------------------------------------------
+
+def adamw_init(params, tc: TrainConfig) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    state = {"m": zeros(params), "v": zeros(params),
+             "count": jnp.zeros((), jnp.int32)}
+    if tc.grad_compression == "int8_ef":
+        state["ef_residual"] = zeros(params)
+    return state
+
+
+def adamw_update(params, grads, opt_state, tc: TrainConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    metrics = {}
+    if tc.grad_compression == "int8_ef":
+        grads, new_res = compress_grads(grads, opt_state["ef_residual"])
+        metrics["ef_residual_norm"] = global_norm(new_res)
+
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    metrics["grad_norm"] = gnorm
+
+    count = opt_state["count"] + 1
+    lr = cosine_lr(count, tc)
+    metrics["lr"] = lr
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_ = b1 * m + (1 - b1) * g32
+        v_ = b2 * v + (1 - b2) * jnp.square(g32)
+        step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + tc.eps)
+        p32 = p.astype(jnp.float32)
+        p_ = p32 - lr * (step + tc.weight_decay * p32)
+        return p_.astype(p.dtype), m_, v_
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    if tc.grad_compression == "int8_ef":
+        new_state["ef_residual"] = new_res
+    return new_params, new_state, metrics
+
+
+def opt_state_schema(param_schema, tc: TrainConfig):
+    """Schema mirror of adamw_init for dry-run lowering (f32 m/v [+residual])."""
+    import dataclasses as dc
+    from repro.common.schema import ParamDef, tree_map_defs
+
+    f32 = lambda d: dc.replace(d, dtype=jnp.float32, init="zeros")
+    s = {"m": tree_map_defs(f32, param_schema),
+         "v": tree_map_defs(f32, param_schema),
+         "count": ParamDef((), (), init="zeros", dtype=jnp.int32)}
+    if tc.grad_compression == "int8_ef":
+        s["ef_residual"] = tree_map_defs(f32, param_schema)
+    return s

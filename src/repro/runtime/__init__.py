@@ -1,0 +1,3 @@
+from repro.runtime.health import Heartbeat, PreemptionGuard, StepMonitor
+
+__all__ = ["Heartbeat", "PreemptionGuard", "StepMonitor"]

@@ -1,0 +1,18 @@
+from repro.train.loop import train_loop
+from repro.train.step import (
+    batch_logical_specs,
+    batch_structs,
+    decode_logical_specs,
+    decode_structs,
+    init_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    state_schema,
+)
+
+__all__ = [
+    "train_loop", "batch_logical_specs", "batch_structs",
+    "decode_logical_specs", "decode_structs", "init_state",
+    "make_decode_step", "make_prefill_step", "make_train_step", "state_schema",
+]

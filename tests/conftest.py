@@ -1,0 +1,11 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — the main suite sees the
+real (1-device) topology; distributed tests spawn subprocesses that set their
+own fake-device count (see tests/distributed_cases.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

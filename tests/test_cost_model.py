@@ -1,0 +1,93 @@
+"""Paper-claim bands for the cost model (the quantitative reproduction)."""
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.graph import rmat
+
+
+def test_fig15_loading_reduction_is_fanout():
+    rows = cm.fig15_table()
+    for r in rows:
+        assert r["load_reduction"] == pytest.approx(50.0)  # paper: 50×
+
+
+def test_fig15_amazon_request_caveat():
+    """Amazon/OGBN (F=32): request traffic comparable to payload — the
+    paper's 'except for Amazon' caveat emerges from the model."""
+    rows = {r["dataset"]: r for r in cm.fig15_table()}
+    assert rows["Amazon"]["load_reduction_with_requests"] < 20
+    assert rows["Reddit"]["load_reduction_with_requests"] > 35
+
+
+def test_fig15_speedup_bands():
+    rows = cm.fig15_table()
+    vs_gcnax = np.mean([r["speedup_vs_gcnax"] for r in rows])
+    vs_insider = np.mean([r["speedup_vs_insider"] for r in rows])
+    assert 3.0 <= vs_gcnax <= 4.2      # paper: 3.6× average
+    assert 2.0 <= vs_insider <= 2.9    # paper: 2.4× average
+
+
+def test_fig16c_breakdown_band():
+    bd = cm.fig16c_breakdown()
+    cut = 1 - bd["graphic"]["total"] / bd["gcnax"]["total"]
+    assert 0.6 <= cut <= 0.8           # paper: ~70% latency reduction
+    # in-SSD aggregation is slower than the ASIC combination engine (paper)
+    assert bd["graphic"]["agg"] >= 0
+    assert bd["insider"]["agg"] > bd["graphic"]["agg"] * 10
+
+
+def test_fig14_area_efficiency():
+    area = cm.fig14_area()
+    assert area["area_eff_vs_insider"] == pytest.approx(5.0)  # paper: 5×
+    assert area["gas_mm2"] < area["digital_mm2"] < area["insider_mm2"]
+
+
+def _bfs_levels(indptr, indices, n, src=0):
+    lev = np.full(n, -1, np.int64)
+    lev[src] = 0
+    frontier = [src]
+    d = 0
+    while frontier:
+        nxt = []
+        for v in frontier:
+            for u in indices[indptr[v]:indptr[v + 1]]:
+                if lev[u] < 0:
+                    lev[u] = d + 1
+                    nxt.append(u)
+        frontier = nxt
+        d += 1
+    return lev
+
+
+def test_fig16a_idle_skip_bands():
+    g = rmat(12, 16, seed=3)
+    indptr, indices, _ = g.to_csr()
+    lev = _bfs_levels(indptr, indices, g.n_vertices)
+    r = cm.simulate_gas_traversal(indptr, lev, cache_mb=1.0)
+    assert 0.3 <= r["speedup_no_skip"] <= 1.3      # paper: 0.4–1×
+    assert 4.0 <= r["speedup_idle_skip"] <= 25.0   # paper avg: 10.1×
+    assert r["speedup_idle_skip"] > 5 * r["speedup_no_skip"]
+
+
+def test_fig16b_cache_scaling_trend():
+    """Speedup increases with cache size; still >1 when graph ≫ cache."""
+    g = rmat(14, 16, seed=3)
+    indptr, indices, _ = g.to_csr()
+    lev = _bfs_levels(indptr, indices, g.n_vertices)
+    speeds = [cm.simulate_gas_traversal(indptr, lev, cache_mb=mb)["speedup_idle_skip"]
+              for mb in (0.5, 1.0, 2.0, 4.0)]
+    assert all(a < b for a, b in zip(speeds, speeds[1:]))
+    assert speeds[0] > 1.0
+
+
+def test_monotonicity_properties():
+    k = cm.C
+    w1 = cm.SageWorkload(batch=1024, fanout=50, n_features=64)
+    w2 = cm.SageWorkload(batch=1024, fanout=50, n_features=128)
+    assert cm.load_bytes(w2, k, "baseline") > cm.load_bytes(w1, k, "baseline")
+    assert cm.latency(w2, "graphic")["total"] > cm.latency(w1, "graphic")["total"]
+    # compression never hurts loading
+    for w in (w1, w2):
+        assert cm.load_bytes(w, k, "cgtrans") < cm.load_bytes(w, k, "baseline")

@@ -1,0 +1,80 @@
+"""Data pipelines + embedding/CE: determinism, resume, vocab-pad masking."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (GraphBatchStream, ShardedTokenFiles, TokenStream,
+                        synthetic_node_labels)
+from repro.graph import uniform_graph
+from repro.models.embedding import chunked_softmax_xent, logits_matmul
+
+
+def test_token_stream_determinism_and_resume():
+    s1 = TokenStream(vocab=100, batch=4, seq_len=16, seed=7)
+    s2 = TokenStream(vocab=100, batch=4, seq_len=16, seed=7)
+    b5a = s1.batch_at(5)
+    b5b = s2.batch_at(5)
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(s1.batch_at(0)["labels"][:, :-1],
+                                  s1.batch_at(0)["tokens"][:, 1:])
+    # host disjointness
+    h0 = TokenStream(vocab=100, batch=4, seq_len=16, seed=7, host=0).batch_at(3)
+    h1 = TokenStream(vocab=100, batch=4, seq_len=16, seed=7, host=1).batch_at(3)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_sharded_token_files_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, 1000, 10000).astype(np.int32)
+    ShardedTokenFiles.write(str(tmp_path), tokens, shard_size=2048)
+    r = ShardedTokenFiles(str(tmp_path))
+    it = r.reader(batch=2, seq_len=32)
+    b0 = next(it)
+    assert b0["tokens"].shape == (2, 32)
+    np.testing.assert_array_equal(b0["tokens"][0], tokens[:32])
+    # resume from step 3 == reading 4th batch fresh
+    it2 = r.reader(batch=2, seq_len=32, start_step=3)
+    fresh = ShardedTokenFiles(str(tmp_path)).reader(batch=2, seq_len=32)
+    for _ in range(3):
+        next(fresh)
+    np.testing.assert_array_equal(next(it2)["tokens"], next(fresh)["tokens"])
+
+
+def test_graph_batch_stream_shapes_and_determinism():
+    g = uniform_graph(200, 2000, seed=1, n_features=8)
+    labels = synthetic_node_labels(g.features, 5)
+    st = GraphBatchStream(g, labels, n_parts=4, batch_per_part=8, k1=3, k2=2)
+    b = st.batch_at(4)
+    assert b["seeds"].shape == (4, 8)
+    assert b["nbrs1"].shape == (4, 8, 3)
+    assert b["nbrs2"].shape == (4, 8 * 4, 2)
+    assert b["labels"].shape == (4, 8)
+    np.testing.assert_array_equal(b["seeds"], st.batch_at(4)["seeds"])
+    assert not np.array_equal(b["seeds"], st.batch_at(5)["seeds"])
+
+
+def test_chunked_ce_matches_naive(rng):
+    B, S, D, V = 2, 24, 8, 40
+    x = jnp.asarray(rng.standard_normal((B, S, D)).astype(np.float32))
+    table = jnp.asarray(rng.standard_normal((V, D)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, V, (B, S)).astype(np.int32))
+    labels = labels.at[0, :3].set(-1)   # padding
+    loss_sum, cnt = chunked_softmax_xent(x, table, labels, max_chunk=5)
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    logp = jax.nn.log_softmax(logits, -1)
+    mask = np.asarray(labels) >= 0
+    want = -np.asarray(logp)[np.arange(B)[:, None], np.arange(S)[None], np.maximum(np.asarray(labels), 0)]
+    np.testing.assert_allclose(float(loss_sum), want[mask].sum(), rtol=1e-5)
+    assert float(cnt) == mask.sum()
+
+
+def test_vocab_pad_masked(rng):
+    D, V, Vpad = 8, 37, 64
+    x = jnp.asarray(rng.standard_normal((2, D)).astype(np.float32))
+    table = jnp.asarray(rng.standard_normal((Vpad, D)).astype(np.float32))
+    logits = logits_matmul(x, table, valid_vocab=V)
+    assert np.all(np.asarray(logits)[:, V:] < -1e29)
+    assert np.all(np.isfinite(np.asarray(logits)[:, :V]))

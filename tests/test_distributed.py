@@ -1,0 +1,50 @@
+"""Multi-device behaviour via subprocesses (8 fake CPU devices each).
+
+Each case lives in tests/distributed_cases.py and sets XLA_FLAGS before
+importing jax — keeping this pytest process on the real 1-device topology.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_HERE = os.path.dirname(__file__)
+_SRC = os.path.join(_HERE, "..", "src")
+
+
+def _run(case: str, timeout=480):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_HERE, "distributed_cases.py"), case],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, f"{case} failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_cgtrans_equivalence():
+    assert "ok" in _run("cgtrans_equivalence")
+
+
+def test_cgtrans_collective_bytes_compression():
+    out = _run("cgtrans_collective_bytes")
+    assert "ratio" in out
+
+
+def test_embedding_cgtrans():
+    assert "ok" in _run("embedding_cgtrans")
+
+
+def test_elastic_checkpoint():
+    assert "ok" in _run("elastic_checkpoint")
+
+
+def test_distributed_sage_training():
+    assert "ok" in _run("distributed_sage_training")
+
+
+def test_pipeline_parallel():
+    assert "ok" in _run("pipeline_parallel")

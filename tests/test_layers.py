@@ -1,0 +1,114 @@
+"""Layer-library unit tests: norms, rope, chunked attention, caches."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=32, n_heads=4,
+                n_kv_heads=2, d_ff=64, vocab=64, head_dim=8,
+                compute_dtype="float32", remat="none")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_rms_norm_unit_scale(rng):
+    x = jnp.asarray(rng.standard_normal((2, 8, 32)).astype(np.float32)) * 7.0
+    out = L.rms_norm(x, jnp.ones(32), 1e-6, zero_centered=False)
+    rms = jnp.sqrt(jnp.mean(out**2, -1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+
+def test_rms_zero_centered_matches_plain(rng):
+    x = jnp.asarray(rng.standard_normal((4, 32)).astype(np.float32))
+    a = L.rms_norm(x, jnp.zeros(32), 1e-6, zero_centered=True)
+    b = L.rms_norm(x, jnp.ones(32), 1e-6, zero_centered=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_layer_norm_moments(rng):
+    x = jnp.asarray(rng.standard_normal((4, 32)).astype(np.float32)) * 3 + 5
+    out = L.layer_norm(x, jnp.ones(32), jnp.zeros(32), 1e-6)
+    np.testing.assert_allclose(np.asarray(out.mean(-1)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out.std(-1)), 1.0, atol=1e-2)
+
+
+def test_rope_preserves_norm_and_relative(rng):
+    hd = 16
+    pos = jnp.arange(12)
+    cos, sin = L.rope_tables(pos, hd, 10000.0)
+    x = jnp.asarray(rng.standard_normal((1, 12, 2, hd)).astype(np.float32))
+    rx = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(rx, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)), atol=1e-4)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = x[:, :1]
+    k = x[:, 1:2]
+    def dot_at(p):
+        c1, s1 = L.rope_tables(jnp.array([p]), hd, 10000.0)
+        c2, s2 = L.rope_tables(jnp.array([p + 3]), hd, 10000.0)
+        return float(jnp.sum(L.apply_rope(q, c1, s1) * L.apply_rope(k, c2, s2)))
+    assert abs(dot_at(0) - dot_at(7)) < 1e-3
+
+
+def test_chunked_attention_equals_flash_ref(rng):
+    from repro.kernels.flash_attention import flash_attention_ref
+    B, S, H, Hkv, hd = 2, 96, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32)) * hd**-0.5
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)).astype(np.float32))
+    for kw in (dict(causal=True), dict(causal=True, window=32),
+               dict(causal=True, softcap=20.0), dict(causal=False)):
+        got = L.chunked_attention(q, k, v, q_chunk=32, **kw)
+        want = flash_attention_ref(q, k, v, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-4)
+
+
+def test_ring_cache_decode_matches_full(rng):
+    """Local-attention ring cache gives the same result as a full cache."""
+    cfg = _cfg(pattern=("local",), window=8)
+    key = jax.random.PRNGKey(0)
+    from repro.common.schema import init_params
+    p = init_params(L.attn_schema(cfg), key)
+    S = 24
+    x = jnp.asarray(rng.standard_normal((1, S, 32)).astype(np.float32))
+    ctx = lambda s: L.LayerCtx(
+        cfg=cfg, rope_local=L.rope_tables(jnp.arange(s) if np.ndim(s) == 0 else s, cfg.hd, 1e4),
+        rope_global=L.rope_tables(jnp.arange(s) if np.ndim(s) == 0 else s, cfg.hd, 1e4))
+    full = L.attn_apply(p, x, ctx(S), kind="local")
+    # prefill S-1 then decode last token
+    c = ctx(S - 1)
+    _, cache = L.attn_prefill(p, x[:, :S - 1], c, kind="local", cache_len=S)
+    assert cache["k"].shape[1] == cfg.window   # ring, not full
+    pos = jnp.array(S - 1, jnp.int32)
+    cd = L.LayerCtx(cfg=cfg,
+                    rope_local=L.rope_tables(pos[None], cfg.hd, 1e4),
+                    rope_global=L.rope_tables(pos[None], cfg.hd, 1e4), pos=pos)
+    out, _ = L.attn_decode(p, x[:, S - 1:], cache, cd, kind="local")
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_gqa_repeats_heads_correctly(rng):
+    """GQA with Hkv=H and duplicated kv == MHA." """
+    B, S, H, hd = 1, 16, 4, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, 2, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, 2, hd)).astype(np.float32))
+    a = L.chunked_attention(q, k, v, causal=True)
+    b = L.chunked_attention(q, jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2), causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_mask_bias_window():
+    bias = np.asarray(L._mask_bias(jnp.arange(6), jnp.arange(6), causal=True, window=3))
+    for i in range(6):
+        for j in range(6):
+            visible = j <= i and i - j < 3
+            assert (bias[i, j] == 0) == visible

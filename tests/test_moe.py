@@ -1,0 +1,88 @@
+"""MoE: routing properties, capacity semantics, CGTrans-combine equivalence."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ModelConfig
+from repro.common.schema import init_params
+from repro.models import layers, moe
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="moe", n_layers=2, d_model=16, n_heads=2,
+                n_kv_heads=2, d_ff=24, vocab=64, head_dim=8, pattern=("moe",),
+                n_experts=8, top_k=2, n_shared_experts=0,
+                compute_dtype="float32", remat="none")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_route_topk_properties(rng):
+    cfg = _cfg()
+    w = jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((4, 10, 16)).astype(np.float32))
+    p, ids, aux = moe.route(w, x, cfg)
+    assert p.shape == (4, 10, 2) and ids.shape == (4, 10, 2)
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, atol=1e-5)   # renormalized
+    assert np.all(np.asarray(p) >= 0)
+    assert np.all(np.asarray(ids) < 8)
+    # distinct experts per token
+    assert np.all(np.asarray(ids[..., 0]) != np.asarray(ids[..., 1]))
+    assert float(aux) >= 1.0 - 1e-5   # load-balance loss lower bound is 1
+
+
+def test_moe_matches_dense_reference(rng):
+    """With ample capacity, capacity-dispatch == direct per-token expert mix."""
+    cfg = _cfg()
+    p = init_params(moe.moe_schema(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.standard_normal((2, 8, 16)).astype(np.float32))
+    out, aux = moe.moe_apply(p, x, cfg, capacity_factor=8.0, group_size=16)
+
+    w, ids, _ = moe.route(p["router"], x, cfg)
+    want = np.zeros_like(np.asarray(x))
+    for b in range(2):
+        for s in range(8):
+            for k in range(cfg.top_k):
+                e = int(ids[b, s, k])
+                xi = np.asarray(x[b, s])
+                g = np.asarray(jax.nn.silu(xi @ np.asarray(p["w_gate"][e])))
+                u = xi @ np.asarray(p["w_up"][e])
+                want[b, s] += float(w[b, s, k]) * ((g * u) @ np.asarray(p["w_down"][e]))
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-4, rtol=1e-3)
+
+
+def test_moe_capacity_drops_tokens(rng):
+    """With capacity factor ≪ 1, outputs shrink (dropped tokens emit 0)."""
+    cfg = _cfg()
+    p = init_params(moe.moe_schema(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.standard_normal((1, 64, 16)).astype(np.float32))
+    full, _ = moe.moe_apply(p, x, cfg, capacity_factor=8.0, group_size=64)
+    tight, _ = moe.moe_apply(p, x, cfg, capacity_factor=0.25, group_size=64)
+    assert float(jnp.linalg.norm(tight)) < float(jnp.linalg.norm(full))
+
+
+def test_shared_experts_added(rng):
+    cfg = _cfg(n_shared_experts=2)
+    p = init_params(moe.moe_schema(cfg), jax.random.PRNGKey(1))
+    x = jnp.asarray(rng.standard_normal((1, 8, 16)).astype(np.float32))
+    out, _ = moe.moe_apply(p, x, cfg, capacity_factor=8.0, group_size=8)
+    shared_only = layers.mlp_apply(p["shared"], x, cfg)
+    p2 = dict(p)
+    p2 = {k: v for k, v in p.items() if k != "shared"}
+    routed_only, _ = moe.moe_apply(p2, x, cfg, capacity_factor=8.0, group_size=8)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(shared_only + routed_only),
+                               atol=1e-5)
+
+
+def test_balanced_router_aux_near_one(rng):
+    """Uniform routing → aux ≈ 1 (its minimum)."""
+    cfg = _cfg()
+    w = jnp.zeros((16, 8))   # uniform logits
+    x = jnp.asarray(rng.standard_normal((2, 32, 16)).astype(np.float32))
+    _, _, aux = moe.route(w, x, cfg)
+    assert 0.9 <= float(aux) <= 1.2

@@ -1,0 +1,89 @@
+"""Optimizer: AdamW convergence, schedule, clipping, int8-EF compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import TrainConfig
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         compress_grads, cosine_lr, global_norm, quantize_int8)
+
+
+def test_adamw_converges_on_quadratic():
+    tc = TrainConfig(learning_rate=0.1, warmup_steps=5, total_steps=200,
+                     weight_decay=0.0, grad_clip=10.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    opt = adamw_init(params, tc)
+
+    @jax.jit
+    def step(params, opt):
+        g = {"w": 2 * (params["w"] - target)}
+        return adamw_update(params, g, opt, tc)
+
+    for _ in range(200):
+        params, opt, _ = step(params, opt)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_cosine_schedule_endpoints():
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100,
+                     min_lr_ratio=0.1)
+    assert float(cosine_lr(jnp.array(0), tc)) == pytest.approx(0.0, abs=1e-9)
+    assert float(cosine_lr(jnp.array(10), tc)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(cosine_lr(jnp.array(100), tc)) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full(4, 10.0), "b": jnp.full(9, 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(13 * 100), rel=1e-5)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # below threshold → untouched
+    small = {"a": jnp.asarray([0.1])}
+    out, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.1, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=1, max_size=50))
+def test_quantize_int8_error_bound(xs):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    q, scale = quantize_int8(x)
+    deq = q.astype(jnp.float32) * scale
+    # error ≤ half a quantization step
+    assert float(jnp.max(jnp.abs(deq - x))) <= float(scale) * 0.5 + 1e-9
+
+
+def test_error_feedback_unbiased_over_time():
+    """With EF, the *accumulated* transmitted grad ≈ accumulated true grad."""
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.standard_normal(64).astype(np.float32))}
+    residual = {"w": jnp.zeros(64)}
+    sent_sum = np.zeros(64)
+    for _ in range(50):
+        sent, residual = compress_grads(g_true, residual)
+        sent_sum += np.asarray(sent["w"])
+    np.testing.assert_allclose(sent_sum / 50, np.asarray(g_true["w"]),
+                               atol=2e-3, rtol=1e-2)
+
+
+def test_int8_ef_training_still_converges():
+    tc = TrainConfig(learning_rate=0.05, warmup_steps=0, total_steps=300,
+                     weight_decay=0.0, grad_compression="int8_ef")
+    target = jnp.asarray([0.5, -1.5])
+    params = {"w": jnp.zeros(2)}
+    opt = adamw_init(params, tc)
+    assert "ef_residual" in opt
+
+    @jax.jit
+    def step(params, opt):
+        g = {"w": 2 * (params["w"] - target)}
+        return adamw_update(params, g, opt, tc)
+
+    for _ in range(300):
+        params, opt, m = step(params, opt)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=5e-2)

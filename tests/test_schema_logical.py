@@ -1,0 +1,76 @@
+"""Schema system + logical axis resolution."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.common.logical import DEFAULT_RULES, to_physical
+from repro.common.schema import (ParamDef, count_params, init_params,
+                                 param_logical_specs, param_structs, stack)
+
+
+def _schema():
+    return {"a": {"w": ParamDef((8, 16), ("embed", "ff"), init="lecun")},
+            "b": ParamDef((16,), ("ff",), init="zeros")}
+
+
+def test_init_specs_structs_consistent():
+    s = _schema()
+    params = init_params(s, jax.random.PRNGKey(0))
+    structs = param_structs(s)
+    specs = param_logical_specs(s)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(structs)
+    for p_, s_ in zip(flat_p, flat_s):
+        assert p_.shape == s_.shape and p_.dtype == s_.dtype
+    assert count_params(s) == 8 * 16 + 16
+    assert jax.tree.structure(params) == jax.tree.structure(structs)
+
+
+def test_stack_prepends_layer_dim():
+    s = stack(_schema(), 5)
+    structs = param_structs(s)
+    assert structs["a"]["w"].shape == (5, 8, 16)
+    specs = param_logical_specs(s)
+    assert specs["a"]["w"][0] == "layers"
+
+
+class _FakeMesh:
+    def __init__(self, axes):
+        self.axis_names = tuple(axes)
+
+
+def test_logical_resolution_drops_missing_axes():
+    mesh2 = _FakeMesh(("data", "model"))
+    mesh3 = _FakeMesh(("pod", "data", "model"))
+    assert to_physical(("batch", None), mesh2) == P("data", None)
+    assert to_physical(("batch", None), mesh3) == P(("pod", "data"), None)
+    # 2D FSDP×TP weight sharding: vocab→model, embed→data
+    assert to_physical(("vocab", "embed"), mesh2) == P("model", "data")
+    # on a model-only mesh the FSDP axis drops away
+    assert to_physical(("vocab", "embed"), _FakeMesh(("model",))) == P("model", None)
+    # unknown logical name → replicated
+    assert to_physical(("nonexistent",), mesh2) == P(None)
+
+
+def test_logical_double_use_guard():
+    """A physical axis may appear at most once in a spec (GSPMD rule)."""
+    mesh = _FakeMesh(("data", "model"))
+    spec = to_physical(("batch", "seq_shard", None), mesh)
+    # batch claims "data"; seq_shard would claim it again → dropped
+    assert spec == P("data", None, None)
+
+
+def test_custom_inits_are_finite_and_in_range():
+    import math
+    d = ParamDef((64,), ("lru",), init="custom", custom="rglru_lambda")
+    lam = init_params({"x": d}, jax.random.PRNGKey(1))["x"]
+    a = np.exp(-8.0 * np.log1p(np.exp(np.asarray(lam))))
+    assert np.all(a > 0.8) and np.all(a < 1.0)
+
+    d2 = ParamDef((32,), (None,), init="custom", custom="ssm_dt_bias")
+    dtb = init_params({"x": d2}, jax.random.PRNGKey(2))["x"]
+    dt = np.log1p(np.exp(np.asarray(dtb)))
+    assert np.all(dt >= 5e-4) and np.all(dt <= 0.2)
