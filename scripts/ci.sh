@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# CI entry point: environment preflight, then the tier-1 suite.
+#
+#   scripts/ci.sh                # full tier-1 (includes ~4 min of
+#                                # distributed subprocess cases)
+#   scripts/ci.sh -m "not distributed"   # extra args forwarded to pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python scripts/check_env.py
+python -m pytest -x -q "$@"

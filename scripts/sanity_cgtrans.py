@@ -8,8 +8,9 @@ import numpy as np
 
 from repro.core import cgtrans
 from repro.graph import partition_by_src, uniform_graph, host_sample
+from repro.launch.mesh import make_data_mesh
 
-mesh = jax.make_mesh((8,), ("data",))
+mesh = make_data_mesh(8)
 rng = np.random.default_rng(0)
 
 # --- full-graph edge aggregation -----------------------------------------

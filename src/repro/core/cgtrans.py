@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import psum_scatter, shard_map
 from repro.core import gas
 
 AXIS = "data"  # the storage-tier axis
@@ -77,8 +78,8 @@ def aggregate_edges(
             # compressed transmission: reduce-scatter the (V, F) partials so
             # each shard receives exactly its owned interval, aggregated.
             if op == "add":
-                out = lax.psum_scatter(partial.reshape(n, part, F), AXIS,
-                                       scatter_dimension=0)
+                out = psum_scatter(partial.reshape(n, part, F), AXIS,
+                                   scatter_dimension=0)
             else:
                 # max/min have no fused reduce-scatter; all-reduce then slice
                 out = lax.pmax(partial, AXIS) if op == "max" else lax.pmin(partial, AXIS)
@@ -86,7 +87,7 @@ def aggregate_edges(
                 out = lax.dynamic_slice_in_dim(out.reshape(n, part, F), i, 1, 0)[0]
             return out[None]
 
-        return jax.shard_map(
+        return shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
             out_specs=P(AXIS))(feats, src_local, dst_global, weights, mask)
@@ -108,7 +109,7 @@ def aggregate_edges(
                 jnp.ones_like(rel, f.dtype), ok, part, op=op, impl=impl)
             return out[None]
 
-        return jax.shard_map(
+        return shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
             out_specs=P(AXIS))(feats, src_local, dst_global, weights, mask)
@@ -171,7 +172,7 @@ def aggregate_sampled(
         out = raw.sum(0).sum(1) / jnp.maximum(ok.sum(0).sum(1), 1)
         return out[None]
 
-    return jax.shard_map(
+    return shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS)),
         out_specs=P(AXIS))(feats, nbrs, mask)

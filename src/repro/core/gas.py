@@ -48,7 +48,8 @@ def _segment_reduce_xla(dst: jax.Array, values: jax.Array, n_rows: int, op: Op):
         return jax.ops.segment_min(values, dst, num_segments=n_rows)
     if op == "or":
         out = jax.ops.segment_max(values.astype(jnp.int32), dst, num_segments=n_rows)
-        return out.astype(values.dtype)
+        # empty segments come back as INT32_MIN; the or-identity is 0
+        return jnp.maximum(out, 0).astype(values.dtype)
     raise ValueError(op)
 
 
@@ -90,11 +91,15 @@ def gas_scatter_weighted(dst: jax.Array, src_vals: jax.Array, weights: jax.Array
     dead row (n_rows) and sliced off, keeping shapes static.
     """
     E = dst.shape[0]
-    vals = src_vals * weights[:, None].astype(src_vals.dtype)
     if op in ("max", "min"):
         fill = jnp.asarray(_INIT[op], src_vals.dtype)
         vals = jnp.where(mask[:, None], src_vals, fill)
+    elif op == "or":
+        # boolean-or ignores edge weights: scaling by a zero or negative
+        # weight before the segment-max would silently flip set bits
+        vals = jnp.where(mask[:, None], src_vals, 0)
     else:
+        vals = src_vals * weights[:, None].astype(src_vals.dtype)
         vals = jnp.where(mask[:, None], vals, 0)
     safe_dst = jnp.where(mask, dst, n_rows)
     out = gas_scatter(safe_dst, vals, n_rows + 1, op=op, impl=impl)

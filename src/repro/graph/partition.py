@@ -7,7 +7,8 @@ always local to the shard — only aggregated destination features ever cross
 the interconnect (CGTrans).
 
 Edges per partition are padded to the max count so the device-side arrays are
-regular (stackable into one (P, E_max) batch for shard_map).
+regular (stackable into one (P, E_max) batch for ``repro.compat.shard_map``,
+the version-portable entry point every sharded dataflow goes through).
 """
 
 from __future__ import annotations

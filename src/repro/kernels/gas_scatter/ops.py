@@ -51,6 +51,11 @@ def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
     if values.ndim == 1:
         return gas_scatter(dst, values[:, None], n_rows, op=op,
                            interpret=interpret)[:, 0]
+    if op == "or":
+        # boolean-or over {0,1} = max with an or-identity of 0 for empty rows
+        out = gas_scatter(dst, values.astype(jnp.float32), n_rows, op="max",
+                          interpret=interpret)
+        return jnp.maximum(out, 0).astype(values.dtype)
 
     E, F = values.shape
     et = K.EDGE_TILE_ADD if op == "add" else K.EDGE_TILE_CMP

@@ -23,6 +23,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.common.logical import batch_axes
+from repro.compat import shard_map
 
 
 def _model_axis(mesh: Optional[Mesh]) -> Optional[str]:
@@ -59,7 +60,7 @@ def embed_lookup(table: jax.Array, ids: jax.Array, *, mesh: Optional[Mesh] = Non
         part = part * ok[..., None].astype(compute_dtype)
         return lax.psum(part, axis)          # compressed transmission: (B,S,D)
 
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis, None), P(dp if dp else None, None)),

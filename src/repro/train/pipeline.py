@@ -22,6 +22,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.common.config import ModelConfig
+from repro.compat import shard_map
 
 
 def split_stages(n_blocks: int, n_stages: int) -> Tuple[Tuple[int, int], ...]:
@@ -112,7 +113,7 @@ def pipelined_apply(
         return lax.psum(outs, axis)
 
     other = tuple(a for a in mesh.axis_names if a != axis)
-    return jax.shard_map(
+    return shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(), P()),   # params + activations replicated over pod
         out_specs=P(),

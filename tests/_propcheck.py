@@ -1,0 +1,149 @@
+"""Offline property-testing shim: ``hypothesis`` when installed, otherwise a
+minimal deterministic fallback so the seed suite collects and runs with zero
+network access.
+
+Usage (the only import style the suite uses):
+
+    from _propcheck import given, settings, strategies as st
+
+When the real ``hypothesis`` is importable we re-export it untouched — full
+shrinking, database, the works. When it is absent, ``given`` expands each
+property test into a fixed deck of examples: every strategy contributes its
+boundary values first (min/max/empty-ish), then pseudo-random draws from a
+``random.Random`` seeded by the test name — deterministic across runs and
+machines, no global state.
+
+The fallback implements exactly the strategy surface this repo uses:
+``integers``, ``floats``, ``booleans``, ``sampled_from``, ``lists``. Grow it
+when a test needs more; anything fancier should gate on ``HAVE_HYPOTHESIS``.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import struct
+    import zlib
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """A draw function plus a deck of boundary examples tried first."""
+
+        def __init__(self, draw, boundaries=()):
+            self._draw = draw
+            self.boundaries = tuple(boundaries)
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+        def example(self, rng: random.Random, i: int):
+            if i < len(self.boundaries):
+                return self.boundaries[i]
+            return self._draw(rng)
+
+    def _f32(x: float) -> float:
+        """Round-trip through float32 (hypothesis ``width=32`` semantics)."""
+        return struct.unpack("f", struct.pack("f", x))[0]
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda r: r.randint(min_value, max_value),
+                             boundaries=(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, *,
+                   allow_nan: bool = False, allow_infinity: bool = False,
+                   width: int = 64) -> _Strategy:
+            cast = _f32 if width == 32 else float
+            lo, hi = cast(min_value), cast(max_value)
+
+            def draw(r):
+                return cast(r.uniform(lo, hi))
+
+            mid = cast((lo + hi) / 2)
+            return _Strategy(draw, boundaries=(lo, hi, cast(0.0) if lo <= 0.0 <= hi else mid))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda r: r.random() < 0.5, boundaries=(False, True))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements),
+                             boundaries=(elements[0], elements[-1]))
+
+        @staticmethod
+        def lists(elements: _Strategy, *, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return [elements.draw(r) for _ in range(n)]
+
+            smallest = [b for b in elements.boundaries[:max(min_size, 1)]]
+            while len(smallest) < min_size:
+                smallest.append(elements.boundaries[0])
+            return _Strategy(draw, boundaries=(smallest[:max_size] or smallest,))
+
+    strategies = _Strategies()
+
+    def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_ignored):
+        """Decorator-factory: records ``max_examples`` on the (possibly
+        already ``given``-wrapped) function; everything else is a no-op."""
+
+        def deco(fn):
+            fn._propcheck_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        """Expand the property into a deterministic example deck.
+
+        The wrapped test runs ``max_examples`` times (from ``@settings`` or
+        the default): boundary combinations first, then seeded random draws.
+        The RNG seed is derived from the test's qualified name, so a deck
+        never shifts because an unrelated test was added."""
+
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            # hypothesis semantics: positional strategies bind to the
+            # RIGHTMOST parameters; everything is passed by name so pytest
+            # fixtures (leftmost params) compose correctly
+            pos_names = names[len(names) - len(arg_strategies):]
+            bound = dict(zip(pos_names, arg_strategies), **kw_strategies)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_propcheck_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    kw = {k: s.example(rng, i) for k, s in bound.items()}
+                    try:
+                        fn(*args, **kwargs, **kw)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property falsified on example {i}: {kw!r}") from e
+
+            # pytest resolves fixtures from the signature (following
+            # __wrapped__) — strip the strategy-bound params so they are not
+            # mistaken for fixtures
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for k, p in sig.parameters.items() if k not in bound])
+            return wrapper
+
+        return deco

@@ -176,12 +176,12 @@ def case_pipeline_parallel():
     """GPipe fill–drain over a 2-stage 'pod' axis == sequential execution."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import AxisType
+    from repro.compat import AxisType, make_mesh
     from repro.train.pipeline import pipelined_apply, split_stages
 
     assert split_stages(10, 4) == ((0, 3), (3, 6), (6, 8), (8, 10))
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(AxisType.Auto,) * 3)
     rng = np.random.default_rng(0)
     n_blocks, D = 6, 8
     W = jnp.asarray(rng.standard_normal((n_blocks, D, D)).astype(np.float32) * 0.3)
@@ -206,4 +206,7 @@ CASES = {n[len("case_"):]: f for n, f in list(globals().items())
          if n.startswith("case_")}
 
 if __name__ == "__main__":
+    if len(sys.argv) != 2 or sys.argv[1] not in CASES:
+        sys.exit(f"usage: {sys.argv[0]} <case>\n"
+                 f"cases: {', '.join(sorted(CASES))}")
     CASES[sys.argv[1]]()

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core import algorithms as alg
 from repro.graph import rmat, uniform_graph

@@ -2,6 +2,9 @@
 
 Each case lives in tests/distributed_cases.py and sets XLA_FLAGS before
 importing jax — keeping this pytest process on the real 1-device topology.
+
+All cases carry the ``distributed`` marker; deselect the ~4-minute subprocess
+suite with ``-m "not distributed"``.
 """
 
 import os
@@ -9,6 +12,8 @@ import subprocess
 import sys
 
 import pytest
+
+pytestmark = pytest.mark.distributed
 
 _HERE = os.path.dirname(__file__)
 _SRC = os.path.join(_HERE, "..", "src")
@@ -18,10 +23,25 @@ def _run(case: str, timeout=480):
     env = dict(os.environ)
     env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    proc = subprocess.run(
-        [sys.executable, os.path.join(_HERE, "distributed_cases.py"), case],
-        capture_output=True, text=True, timeout=timeout, env=env)
-    assert proc.returncode == 0, f"{case} failed:\n{proc.stdout}\n{proc.stderr}"
+    cmd = [sys.executable, os.path.join(_HERE, "distributed_cases.py"), case]
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+    except subprocess.TimeoutExpired as e:
+        pytest.fail(
+            f"case {case!r} timed out after {timeout}s\n"
+            f"--- captured stdout ---\n{e.stdout or ''}\n"
+            f"--- captured stderr ---\n{e.stderr or ''}",
+            pytrace=False)
+    if proc.returncode != 0:
+        # surface the child's traceback directly — an import/compat break in
+        # the subprocess must read as itself, not as `assert 1 == 0` around
+        # a CompletedProcess repr
+        pytest.fail(
+            f"case {case!r} exited {proc.returncode}\n"
+            f"--- child stdout ---\n{proc.stdout}\n"
+            f"--- child stderr ---\n{proc.stderr}",
+            pytrace=False)
     return proc.stdout
 
 

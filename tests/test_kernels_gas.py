@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.kernels.gas_scatter import gas_scatter, gas_scatter_ref, occupancy_map
 from repro.kernels.gas_scatter import kernel as K
@@ -79,6 +79,24 @@ def test_property_matches_oracle(e, f, r, op, seed):
     dst = jnp.asarray(rng.integers(-2, r + 2, e).astype(np.int32))
     val = jnp.asarray(rng.standard_normal((e, f)).astype(np.float32))
     _cmp(dst, val, r, op)
+
+
+def test_weighted_or_ignores_weights(rng):
+    """Regression: op="or" must not scale by edge weights — a zero or
+    negative weight used to zero/flip the contribution before the masked
+    segment-max, silently corrupting boolean-or semantics."""
+    from repro.core.gas import gas_scatter_weighted
+
+    dst = jnp.asarray(np.array([0, 0, 1, 2, 2, 3], np.int32))
+    src = jnp.asarray(np.array([1, 0, 1, 1, 0, 1], np.int32))[:, None]
+    w = jnp.asarray(np.array([0.0, 5.0, -2.0, 0.0, 1.0, -1.0], np.float32))
+    mask = jnp.asarray(np.array([1, 1, 1, 1, 1, 0], bool))
+    # row0: {1,0}→1 even with weight 0; row1: {1}→1 despite negative weight;
+    # row2: {1,0}→1 with weight 0 on the set bit; row3: masked out → 0
+    for impl in ("xla", "pallas"):
+        out = gas_scatter_weighted(dst, src, w, mask, 4, op="or", impl=impl)
+        np.testing.assert_array_equal(np.asarray(out)[:, 0], [1, 1, 1, 0],
+                                      err_msg=impl)
 
 
 @settings(max_examples=10, deadline=None)

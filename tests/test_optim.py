@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.common.config import TrainConfig
 from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
