@@ -8,9 +8,19 @@ sampling fan-out K and feature width F, and writes the trajectory to
 
 The headline: baseline (GCNAX-style raw transmission) ships O(B·K·F) bytes,
 CGTrans ships O(B·F) — the ratio tracks the fan-out K, reproducing the
-paper's fan-in compression (their 50× at K≈50). Nothing executes; this is a
-compile-time measurement, so it runs in seconds on the 8-way fake-device CPU
-topology.
+paper's fan-in compression at the paper's own operating point (K≈50, the
+``paper_figure`` row, asserted ≥ 30×).
+
+Two measurements per run:
+
+* byte rows — compile-time only (HLO diffing), seconds on the 8-way
+  fake-device CPU topology;
+* ``agg_time`` rows — the per-shard aggregation wall time of the sharded
+  cgtrans dataflow with ``impl="xla"`` vs ``impl="pallas"`` (the FAST-GAS
+  kernel; interpret-mode on CPU, so treat the absolute numbers as a
+  correctness-path comparison, not kernel speed).
+
+``benchmarks/run.py`` runs this script and folds both into its CSV output.
 
 Run:  PYTHONPATH=src python benchmarks/collective_bytes.py [--out PATH]
 """
@@ -21,6 +31,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
@@ -34,6 +45,8 @@ from repro.launch import hlo_analysis as H  # noqa: E402
 from repro.launch.mesh import make_data_mesh  # noqa: E402
 
 FLOWS = ("baseline", "cgtrans")
+PAPER_K = 50          # paper §4.2: GraphSAGE samples 50 neighbors
+PAPER_MIN_RATIO = 30  # the ≈50× claim, with slack for collective overheads
 
 
 def _collective_bytes(fn, *args) -> float:
@@ -75,6 +88,30 @@ def bench_full_graph(ways: int, F: int, V: int = 256, E: int = 4096) -> dict:
     return row
 
 
+def bench_agg_time(ways: int = 8, V: int = 256, E: int = 4096, F: int = 16,
+                   reps: int = 3) -> list:
+    """Per-shard aggregation wall time of the sharded cgtrans dataflow,
+    impl="xla" vs impl="pallas" (the FAST-GAS kernel) — actually executed,
+    not just lowered."""
+    mesh = make_data_mesh(ways)
+    g = uniform_graph(V, E, seed=1, n_features=F, weights=True)
+    pg = partition_by_src(g, ways)
+    args = (jnp.asarray(pg.features), jnp.asarray(pg.src), jnp.asarray(pg.dst),
+            jnp.asarray(pg.weights), jnp.asarray(pg.mask))
+    rows = []
+    for impl in ("xla", "pallas"):
+        fn = jax.jit(lambda *a, i=impl: cgtrans.aggregate_edges(
+            *a, mesh=mesh, dataflow="cgtrans", impl=i))
+        jax.block_until_ready(fn(*args))             # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*args))
+        us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append({"mode": "agg_time", "ways": ways, "V": V, "E": E, "F": F,
+                     "impl": impl, "us": us, "us_per_shard": us / ways})
+    return rows
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--out", default="BENCH_collective_bytes.json")
@@ -102,6 +139,12 @@ def main(argv=None) -> int:
         emit(bench_sampled(ways, K=16, F=128))
         emit(bench_full_graph(ways, F=16))
 
+    # the paper figure: the operating point of the ≈50× claim (K≈50) —
+    # always measured, even under --fast (benchmarks/run.py keys on it)
+    paper_row = bench_sampled(8, K=PAPER_K, F=128)
+    paper_row["paper_figure"] = f"50x_claim_at_K{PAPER_K}"
+    emit(paper_row)
+
     if not args.fast:
         # fan-out sweep: the compression ratio should track K
         for K in (4, 16, 64):
@@ -110,15 +153,30 @@ def main(argv=None) -> int:
         for F in (32, 128, 512):
             emit(bench_sampled(8, K=16, F=F))
 
+    # per-shard aggregation time: the FAST-GAS kernel inside the sharded
+    # dataflow vs the XLA oracle (executed on the 8-way fake mesh)
+    for r in bench_agg_time(8):
+        rows.append(r)
+        print(f"agg_time/{r['ways']}-way impl={r['impl']:<6s} "
+              f"{r['us']:>10.0f}us total  {r['us_per_shard']:>9.0f}us/shard")
+
     # the paper's claim, asserted: sampled compression ≈ fan-out (same
-    # threshold as tests/distributed_cases.py::case_cgtrans_collective_bytes)
+    # threshold as tests/distributed_cases.py::case_cgtrans_collective_bytes),
+    # plus the headline ≥30× at the paper's K≈50 operating point
     checked = [r for r in rows if r["mode"] == "sampled" and r["ways"] == 8]
-    failures = [r for r in checked if r["ratio"] <= r["K"] / 4]
+    failures = []            # (row, threshold-it-missed) — one entry per row
+    for r in checked:
+        thresh = max(r["K"] / 4,
+                     PAPER_MIN_RATIO if r.get("paper_figure") else 0.0)
+        if r["ratio"] <= thresh:
+            failures.append((r, thresh))
     summary = {
-        "claim": "baseline/cgtrans collective bytes > K/4 on the 8-way mesh",
+        "claim": "baseline/cgtrans collective bytes > K/4 on the 8-way mesh; "
+                 f">= {PAPER_MIN_RATIO}x at the paper's K={PAPER_K}",
         "checked": len(checked),
         "failed": len(failures),
         "max_ratio": max((r["ratio"] for r in checked), default=0.0),
+        "paper_figure_ratio": paper_row["ratio"],
     }
     out = {"jax_version": jax.__version__, "devices": n_dev,
            "rows": rows, "summary": summary}
@@ -126,11 +184,12 @@ def main(argv=None) -> int:
         json.dump(out, f, indent=2)
     print(f"\nwrote {args.out}: {len(rows)} rows; "
           f"{summary['checked'] - summary['failed']}/{summary['checked']} "
-          f"sampled rows beat K/4 (max ratio {summary['max_ratio']:.1f}×)")
+          f"sampled rows beat their threshold "
+          f"(max ratio {summary['max_ratio']:.1f}×)")
     if failures:
-        for r in failures:
+        for r, thresh in failures:
             print(f"FAIL: K={r['K']} F={r['F']} ratio={r['ratio']:.2f} "
-                  f"≤ {r['K'] / 4:.1f}", file=sys.stderr)
+                  f"≤ {thresh:.1f}", file=sys.stderr)
         return 1
     return 0
 

@@ -26,9 +26,9 @@ from repro.core.gcn import GCNConfig, gcn_schema, sage_loss
 from repro.data import GraphBatchStream, synthetic_node_labels
 from repro.graph import partition_by_src, rmat
 from repro.launch.mesh import make_data_mesh
-from repro.optim import adamw_init, adamw_update
+from repro.optim import adamw_init
 from repro.runtime import PreemptionGuard, StepMonitor
-from repro.train import train_loop
+from repro.train import make_sage_train_step, train_loop
 
 
 def main():
@@ -42,6 +42,9 @@ def main():
     ap.add_argument("--batch-per-part", type=int, default=64)
     ap.add_argument("--dataflow", choices=["cgtrans", "baseline"],
                     default="cgtrans")
+    ap.add_argument("--request-chunk", type=int, default=None,
+                    help="SSD command-queue depth: seeds per sampled-"
+                         "aggregation request burst (None = unchunked)")
     ap.add_argument("--ckpt-dir", default="/tmp/graphsage_ckpt")
     args = ap.parse_args()
 
@@ -61,7 +64,8 @@ def main():
           f"features owner-sharded {pg.features.shape} over 8 shards")
 
     cfg = GCNConfig(n_features=args.features, hidden=args.hidden, n_classes=16,
-                    fanout=args.fanout, dataflow=args.dataflow)
+                    fanout=args.fanout, dataflow=args.dataflow,
+                    request_chunk=args.request_chunk)
     tc = TrainConfig(learning_rate=3e-3, warmup_steps=20,
                      total_steps=args.steps, weight_decay=0.01)
     params = init_params(gcn_schema(cfg), jax.random.PRNGKey(0))
@@ -73,14 +77,7 @@ def main():
                               batch_per_part=args.batch_per_part,
                               k1=args.fanout, k2=args.fanout)
 
-    @jax.jit
-    def step(state, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            lambda p: sage_loss(p, feats, batch, cfg, mesh=mesh),
-            has_aux=True)(state["params"])
-        new_p, new_opt, om = adamw_update(state["params"], grads, state["opt"], tc)
-        return ({"params": new_p, "opt": new_opt, "step": state["step"] + 1},
-                {**metrics, **om, "total_loss": loss})
+    step = jax.jit(make_sage_train_step(cfg, tc, feats=feats, mesh=mesh))
 
     state = {"params": params, "opt": adamw_init(params, tc),
              "step": jnp.zeros((), jnp.int32)}

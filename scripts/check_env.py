@@ -69,6 +69,24 @@ def main() -> int:
         rows.append(("compat.smoke", "FAILED"))
         failures.append(f"compat smoke test failed on this JAX: {e!r}")
 
+    # -- Pallas interpret mode (the FAST-GAS kernel off-TPU) ---------------
+    # the differential tier (tests/test_cgtrans_pallas.py, ci.sh --tier
+    # pallas) runs the kernel in interpret mode on CPU; probe it with a tiny
+    # scatter so a broken pallas install fails HERE with one message
+    try:
+        import jax.numpy as jnp
+        from repro.kernels.gas_scatter import gas_scatter
+
+        out = gas_scatter(jnp.array([0, 1, 0], jnp.int32),
+                          jnp.ones((3, 2), jnp.float32), 2, op="add")
+        assert float(out.sum()) == 6.0
+        rows.append(("pallas interpret", "functional (gas_scatter probe ok)"))
+    except Exception as e:  # noqa: BLE001 — report, don't crash the report
+        rows.append(("pallas interpret", "BROKEN"))
+        failures.append(
+            f"Pallas interpret mode is non-functional on this JAX — the "
+            f"impl='pallas' differential tier cannot run: {e!r}")
+
     # -- fake-device topology for the distributed cases --------------------
     flag = "--xla_force_host_platform_device_count=8"
     rows.append(("distributed tests",

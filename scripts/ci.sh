@@ -1,13 +1,45 @@
 #!/usr/bin/env bash
-# CI entry point: environment preflight, then the tier-1 suite.
+# CI entry point: environment preflight, then the selected test lane.
 #
-#   scripts/ci.sh                # full tier-1 (includes ~4 min of
-#                                # distributed subprocess cases)
+#   scripts/ci.sh                        # full tier-1 (includes ~4 min of
+#                                        # distributed subprocess cases)
+#   scripts/ci.sh --tier pallas          # the FAST-GAS differential suite
+#                                        # only, on 8 fake devices (the
+#                                        # pallas/xla parity lane)
 #   scripts/ci.sh -m "not distributed"   # extra args forwarded to pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+TIER="full"
+ARGS=()
+while [[ $# -gt 0 ]]; do
+  if [[ "$1" == "--tier" ]]; then
+    TIER="${2:?--tier needs an argument (full|pallas)}"
+    shift 2
+  else
+    ARGS+=("$1")
+    shift
+  fi
+done
+
 python scripts/check_env.py
-python -m pytest -x -q "$@"
+
+case "$TIER" in
+  full)
+    python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
+    ;;
+  pallas)
+    # the differential tier: pallas ≡ xla ≡ reference across both sharded
+    # dataflows. The in-process matrix runs directly on the fake 8-device
+    # topology; the on-mesh matrix still subprocesses (and sets its own
+    # XLA_FLAGS), so forcing the flag here is safe for this lane.
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+      python -m pytest -x -q tests/test_cgtrans_pallas.py ${ARGS[@]+"${ARGS[@]}"}
+    ;;
+  *)
+    echo "unknown --tier '$TIER' (expected: full|pallas)" >&2
+    exit 2
+    ;;
+esac

@@ -2,7 +2,17 @@
 
 Fan-out 50 per the paper §4.2 ("GraphSAGE samples 50 neighbors at a time
 according to the general setup"); feature widths from Table II.
+
+``impl`` / ``request_chunk`` are the two FAST-GAS deployment knobs surfaced
+from ``repro.core.cgtrans``: ``impl="pallas"`` runs every per-shard
+aggregation through the in-SSD kernel (interpret-mode off-TPU), and
+``request_chunk`` is the SSD command-queue depth — the sampled dataflow
+streams its id block through the collectives that many seeds at a time,
+bounding per-shard peak gather memory. Training keeps ``impl="xla"`` (the
+kernel has no VJP); ``PALLAS_CONFIG`` is the inference/benchmark deployment.
 """
+
+import dataclasses
 
 from repro.core.gcn import GCNConfig
 
@@ -15,7 +25,13 @@ CONFIG = GCNConfig(
     aggregate="add",
     dataflow="cgtrans",
     n_layers=2,
+    impl="xla",        # oracle backend; differentiable (training default)
+    request_chunk=None,  # unchunked: one request burst per batch
 )
+
+# The deployed FAST-GAS configuration: Pallas kernel aggregation + a 16-seed
+# command queue (peak gather memory ∝ 16·K·F instead of B_loc·K·F).
+PALLAS_CONFIG = dataclasses.replace(CONFIG, impl="pallas", request_chunk=16)
 
 # per-dataset feature widths (Table II) for benchmarks
 TABLE_II_GCN = {

@@ -11,7 +11,22 @@ in-SSD invariant). Two dataflows over identical math:
   ship only those. Interconnect bytes ∝ V·F (or B·F): a fan-in/fan-out×
   compression — the paper's 50×.
 
-Both are exposed full-graph (edge COO) and sampled (GraphSAGE fan-out).
+Both are exposed full-graph (edge COO) and sampled (GraphSAGE fan-out), and
+both run the per-shard reduction on either GAS backend: ``impl="xla"`` (the
+jnp oracle) or ``impl="pallas"`` (the FAST-GAS kernel — CAM match + MXU
+one-hot contraction + idle-skip; interpret-mode on CPU). ``pallas_call`` has
+no shard_map replication rule, so the pallas dataflows trace with the
+replication check disabled (``check_vma=False``) — the differential tier in
+``tests/test_cgtrans_pallas.py`` is what guards their agreement instead.
+
+``aggregate_sampled`` additionally supports a **chunked request stream**
+(``request_chunk=``): instead of all-gathering the whole ``(B_loc, K)`` id
+block, the seed block is streamed through a ``lax.scan`` in chunks — the
+paper's SSD command-queue analogue — bounding per-shard peak gather memory at
+``O(n·chunk·K·F)`` instead of ``O(n·B_loc·K·F)``. The chunked path is
+bit-exact with the unchunked one (chunking partitions *seeds*, never a seed's
+K contributions), which ``tests/test_cgtrans_pallas.py`` asserts.
+
 ``benchmarks/collective_bytes.py`` lowers both on the production mesh and
 diffs the collective bytes in the compiled HLO — the mechanism, measured.
 """
@@ -30,6 +45,16 @@ from repro.compat import psum_scatter, shard_map
 from repro.core import gas
 
 AXIS = "data"  # the storage-tier axis
+
+
+def _check_vma(impl: str) -> Optional[bool]:
+    """shard_map replication-check setting for a dataflow using ``impl``.
+
+    ``pallas_call`` has no replication rule (NotImplementedError on trace), so
+    pallas dataflows must disable the check; the xla dataflows keep the
+    installed default.
+    """
+    return False if impl == "pallas" else None
 
 
 # ---------------------------------------------------------------------------
@@ -73,7 +98,9 @@ def aggregate_edges(
 
     if dataflow == "cgtrans":
         def shard_fn(f, s, d, w, m):
-            # f: (1, part, F); edge arrays (1, E)
+            # f: (1, part, F); edge arrays (1, E). Per-shard E need not be
+            # tile-aligned — the kernel wrapper pads and rebuilds the
+            # occupancy map per shard from this shard's (padded) dst ids.
             partial = _agg_local(f[0], s[0], d[0], w[0], m[0], V, op, impl)
             # compressed transmission: reduce-scatter the (V, F) partials so
             # each shard receives exactly its owned interval, aggregated.
@@ -81,8 +108,10 @@ def aggregate_edges(
                 out = psum_scatter(partial.reshape(n, part, F), AXIS,
                                    scatter_dimension=0)
             else:
-                # max/min have no fused reduce-scatter; all-reduce then slice
-                out = lax.pmax(partial, AXIS) if op == "max" else lax.pmin(partial, AXIS)
+                # max/min/or have no fused reduce-scatter; all-reduce then
+                # slice. or-partials are ≥ 0, so pmax realizes boolean-or.
+                out = (lax.pmax(partial, AXIS) if op in ("max", "or")
+                       else lax.pmin(partial, AXIS))
                 i = lax.axis_index(AXIS)
                 out = lax.dynamic_slice_in_dim(out.reshape(n, part, F), i, 1, 0)[0]
             return out[None]
@@ -90,12 +119,18 @@ def aggregate_edges(
         return shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
-            out_specs=P(AXIS))(feats, src_local, dst_global, weights, mask)
+            out_specs=P(AXIS), check_vma=_check_vma(impl),
+        )(feats, src_local, dst_global, weights, mask)
 
     if dataflow == "baseline":
         def shard_fn(f, s, d, w, m):
-            # raw transmission: gather locally, ship the full edge payload
-            raw = gas.gas_gather(f[0], s[0]) * w[0][:, None].astype(f.dtype)
+            # raw transmission: gather locally, ship the full edge payload.
+            # Weights scale contributions only under op="add" — max/min take
+            # the raw feature and or ignores weights entirely (matching
+            # gas_scatter_weighted, so baseline ≡ cgtrans ≡ reference).
+            raw = gas.gas_gather(f[0], s[0])
+            if op == "add":
+                raw = raw * w[0][:, None].astype(raw.dtype)
             raw = jnp.where(m[0][:, None], raw, 0)
             all_raw = lax.all_gather(raw, AXIS)          # (n, E, F) — E·F·n bytes
             all_dst = lax.all_gather(d[0], AXIS)
@@ -106,20 +141,85 @@ def aggregate_edges(
             ok = all_m.reshape(-1) & (rel >= 0) & (rel < part)
             out = gas.gas_scatter_weighted(
                 jnp.clip(rel, 0, part - 1), all_raw.reshape(-1, F),
-                jnp.ones_like(rel, f.dtype), ok, part, op=op, impl=impl)
+                jnp.ones_like(rel, jnp.float32), ok, part, op=op, impl=impl)
             return out[None]
 
         return shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
-            out_specs=P(AXIS))(feats, src_local, dst_global, weights, mask)
+            out_specs=P(AXIS), check_vma=_check_vma(impl),
+        )(feats, src_local, dst_global, weights, mask)
 
     raise ValueError(dataflow)
 
 
 # ---------------------------------------------------------------------------
-# sampled GraphSAGE aggregation: out[b] = mean_k feats[nbrs[b, k]]
+# sampled GraphSAGE aggregation: out[b] = reduce_k feats[nbrs[b, k]]
 # ---------------------------------------------------------------------------
+
+def _seed_reduce(f_shard, rel, own, op: gas.Op, impl: str):
+    """Per-request-block GAS reduction: (R, K) local ids → (R, F) partials.
+
+    This is the in-SSD step of the sampled path — the seed index is the
+    destination row, so the fan-out reduction is exactly a FAST-GAS scatter
+    (``impl`` selects the backend). Rows with no owned neighbor hold the op
+    identity (0 for add/or, ±inf for max/min). Also returns (R,) own counts.
+    """
+    R, K = rel.shape
+    rows = gas.gas_gather(f_shard, rel.reshape(-1))              # (R·K, F)
+    seed = jnp.repeat(jnp.arange(R, dtype=jnp.int32), K)
+    red = gas.gas_scatter_weighted(
+        seed, rows, jnp.ones((R * K,), jnp.float32), own.reshape(-1), R,
+        op=op, impl=impl)
+    return red, own.sum(-1)
+
+
+def _finalize(red, cnt, op: gas.Op):
+    """Partial → output rows: mean for add, identity-passthrough otherwise."""
+    if op == "add":
+        return red / jnp.maximum(cnt, 1).astype(red.dtype)[..., None]
+    return red
+
+
+def _combine_shards(parts, cnts, op: gas.Op):
+    """(n, B, F) per-source-shard partials (+ (n, B) counts) → (B, F)."""
+    if op == "add":
+        return parts.sum(0) / jnp.maximum(cnts.sum(0), 1).astype(parts.dtype)[..., None]
+    if op in ("max", "or"):
+        return parts.max(0)
+    return parts.min(0)
+
+
+def _pad_rows(x, mult, fill):
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1), constant_values=fill)
+
+
+def scan_request_chunks(body, nbrs2d, mask2d, chunk: int):
+    """Stream the (R, K) request block through ``body`` in row chunks.
+
+    The SSD command-queue analogue: requests are issued ``chunk`` rows at a
+    time; padded rows are all-masked so they reduce to the op identity and
+    are sliced off. Chunking partitions rows (never a row's K entries), so
+    the result is bit-exact with one full-block ``body`` call. ``body`` maps
+    an (chunk, K) id/mask pair to (chunk, F) output rows. Shared with the
+    chunked embedding lookup (``repro.models.embedding``).
+    """
+    R = nbrs2d.shape[0]
+    chunk = max(1, min(chunk, R))
+    nb = _pad_rows(nbrs2d, chunk, 0)
+    mk = _pad_rows(mask2d, chunk, False)
+    steps = nb.shape[0] // chunk
+
+    def step(_, inp):
+        return None, body(*inp)
+
+    _, outs = lax.scan(step, None,
+                       (nb.reshape(steps, chunk, -1), mk.reshape(steps, chunk, -1)))
+    return outs.reshape(steps * chunk, -1)[:R]
+
 
 def aggregate_sampled(
     feats: jax.Array,     # (P, part, F) owner-sharded features
@@ -128,51 +228,91 @@ def aggregate_sampled(
     *,
     mesh: Optional[Mesh] = None,
     dataflow: str = "cgtrans",
+    op: gas.Op = "add",
+    impl: str = "xla",
+    request_chunk: Optional[int] = None,
 ) -> jax.Array:
-    """Returns (P, B_loc, F) mean-aggregated neighbor features per seed."""
+    """Returns (P, B_loc, F) aggregated neighbor features per seed.
+
+    ``op="add"`` is the masked *mean* (GraphSAGE); max/min/or reduce
+    elementwise over the valid samples (seeds with no valid sample hold the
+    op identity: ±inf for max/min, 0 for or). ``impl`` selects the GAS
+    backend for every per-shard reduction; ``request_chunk`` streams the seed
+    block through the collectives ``request_chunk`` seeds at a time.
+    """
+    if dataflow not in ("cgtrans", "baseline"):
+        raise ValueError(dataflow)
     Pn, part, F = feats.shape
     _, B_loc, K = nbrs.shape
 
     if mesh is None or AXIS not in mesh.axis_names or mesh.shape[AXIS] == 1:
         table = feats.reshape(Pn * part, F)
-        g = gas.gas_gather(table, nbrs.reshape(-1)).reshape(Pn, B_loc, K, F)
-        g = jnp.where(mask[..., None], g, 0)
-        cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1)
-        return g.sum(2) / cnt.astype(g.dtype)
+
+        def body(nb_c, m_c):
+            red, cnt = _seed_reduce(table, nb_c, m_c, op, impl)
+            return _finalize(red, cnt, op)
+
+        flat_nb = nbrs.reshape(Pn * B_loc, K)
+        flat_m = mask.reshape(Pn * B_loc, K)
+        if request_chunk is None:
+            out = body(flat_nb, flat_m)
+        else:
+            out = scan_request_chunks(body, flat_nb, flat_m, request_chunk)
+        return out.reshape(Pn, B_loc, F)
 
     n = mesh.shape[AXIS]
 
     def shard_fn(f, nb, m):
         f, nb, m = f[0], nb[0], m[0]
-        # request broadcast (ids only — tiny; "addresses into the SSD")
-        ids = lax.all_gather(nb, AXIS)                   # (n, B_loc, K)
-        msk = lax.all_gather(m, AXIS)
         lo = lax.axis_index(AXIS) * part
-        rel = ids - lo
-        own = msk & (rel >= 0) & (rel < part)
-        rows = gas.gas_gather(f, jnp.clip(rel, 0, part - 1).reshape(-1, K))
-        rows = jnp.where(own.reshape(-1, K)[..., None], rows.astype(f.dtype), 0)
 
-        if dataflow == "cgtrans":
-            # in-SSD aggregation: partial sum per seed, ship (n·B_loc, F)
-            part_sum = rows.sum(1).reshape(n, B_loc, F)
-            part_cnt = own.sum(-1).astype(f.dtype)       # (n, B_loc)
-            tot = lax.all_to_all(part_sum, AXIS, split_axis=0, concat_axis=0,
-                                 tiled=False)
-            cnt = lax.all_to_all(part_cnt[..., None], AXIS, split_axis=0,
-                                 concat_axis=0, tiled=False)
-            out = tot.sum(0) / jnp.maximum(cnt.sum(0), 1)
-            return out[None]
+        def body(nb_c, m_c):
+            # request broadcast (ids only — tiny; "addresses into the SSD")
+            C = nb_c.shape[0]
+            ids = lax.all_gather(nb_c, AXIS)                 # (n, C, K)
+            msk = lax.all_gather(m_c, AXIS)
+            rel = ids - lo
+            own = msk & (rel >= 0) & (rel < part)
+            relc = jnp.clip(rel, 0, part - 1)
 
-        # baseline: ship raw (n·B_loc·K, F) neighbor rows to seed owners
-        raw = rows.reshape(n, B_loc, K, F)
-        raw = lax.all_to_all(raw, AXIS, split_axis=0, concat_axis=0, tiled=False)
-        ok = lax.all_to_all(own.reshape(n, B_loc, K)[..., None].astype(f.dtype),
-                            AXIS, split_axis=0, concat_axis=0, tiled=False)
-        out = raw.sum(0).sum(1) / jnp.maximum(ok.sum(0).sum(1), 1)
+            if dataflow == "cgtrans":
+                # in-SSD aggregation: GAS-reduce per seed, ship (n·C, F)
+                red, cnt = _seed_reduce(
+                    f, relc.reshape(n * C, K), own.reshape(n * C, K), op, impl)
+                parts = lax.all_to_all(red.reshape(n, C, F), AXIS,
+                                       split_axis=0, concat_axis=0, tiled=False)
+                if op == "add":
+                    cnts = lax.all_to_all(
+                        cnt.reshape(n, C)[..., None].astype(f.dtype), AXIS,
+                        split_axis=0, concat_axis=0, tiled=False)[..., 0]
+                else:
+                    cnts = None
+                return _combine_shards(parts, cnts, op)
+
+            # baseline: ship raw (n·C·K, F) neighbor rows to the seed owners,
+            # reduce there ("the accelerator") — also through the GAS engine.
+            rows = gas.gas_gather(f, relc.reshape(-1)).reshape(n, C, K, F)
+            rows = jnp.where(own[..., None], rows, 0)
+            raw = lax.all_to_all(rows, AXIS, split_axis=0, concat_axis=0,
+                                 tiled=False)                 # (n, C, K, F)
+            okk = lax.all_to_all(own[..., None], AXIS, split_axis=0,
+                                 concat_axis=0, tiled=False)[..., 0]
+            flat = raw.transpose(1, 0, 2, 3).reshape(C * n * K, F)
+            okf = okk.transpose(1, 0, 2).reshape(C * n * K)
+            seed = jnp.repeat(jnp.arange(C, dtype=jnp.int32), n * K)
+            red = gas.gas_scatter_weighted(
+                seed, flat, jnp.ones((C * n * K,), jnp.float32), okf, C,
+                op=op, impl=impl)
+            return _finalize(red, okf.reshape(C, n * K).sum(-1), op)
+
+        if request_chunk is None:
+            out = body(nb, m)
+        else:
+            out = scan_request_chunks(body, nb, m, request_chunk)
         return out[None]
 
     return shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS)),
-        out_specs=P(AXIS))(feats, nbrs, mask)
+        out_specs=P(AXIS), check_vma=_check_vma(impl),
+    )(feats, nbrs, mask)

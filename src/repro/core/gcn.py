@@ -34,6 +34,9 @@ class GCNConfig:
     aggregate: str = "add"       # add | max  (paper: sum and max are common)
     dataflow: str = "cgtrans"    # cgtrans | baseline
     n_layers: int = 2
+    impl: str = "xla"            # xla | pallas — GAS backend for aggregation
+    request_chunk: Optional[int] = None  # SSD command-queue depth (seeds per
+                                         # sampled-aggregation request burst)
 
 
 def gcn_schema(cfg: GCNConfig) -> Dict[str, Any]:
@@ -57,13 +60,17 @@ def gcn_schema(cfg: GCNConfig) -> Dict[str, Any]:
 
 def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
                      cfg: GCNConfig, *, mesh: Optional[Mesh] = None,
-                     impl: str = "xla"):
-    """feats: (P, part, F) owner-sharded. Returns (P, part, C) logits."""
+                     impl: Optional[str] = None):
+    """feats: (P, part, F) owner-sharded. Returns (P, part, C) logits.
+
+    ``impl`` overrides ``cfg.impl`` when given (the benchmarks sweep it).
+    """
     h = feats
     for i in range(cfg.n_layers):
         agg = cgtrans.aggregate_edges(
             h, src_local, dst_global, weights, mask,
-            mesh=mesh, dataflow=cfg.dataflow, op=cfg.aggregate, impl=impl)
+            mesh=mesh, dataflow=cfg.dataflow, op=cfg.aggregate,
+            impl=impl or cfg.impl)
         if cfg.aggregate == "max":
             agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
         h = jnp.concatenate([h, agg], axis=-1)
@@ -75,11 +82,14 @@ def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
 # minibatch GraphSAGE
 # ---------------------------------------------------------------------------
 
-def lookup_rows(feats, ids, *, mesh=None, dataflow="cgtrans"):
+def lookup_rows(feats, ids, *, mesh=None, dataflow="cgtrans", impl="xla",
+                request_chunk=None):
     """Distributed row lookup: ids (P, B_loc) → (P, B_loc, F)."""
     nbrs = ids[..., None]
     mask = jnp.ones_like(nbrs, dtype=bool)
-    return cgtrans.aggregate_sampled(feats, nbrs, mask, mesh=mesh, dataflow=dataflow)
+    return cgtrans.aggregate_sampled(feats, nbrs, mask, mesh=mesh,
+                                     dataflow=dataflow, impl=impl,
+                                     request_chunk=request_chunk)
 
 
 def sage_forward(params, feats, batch, cfg: GCNConfig, *,
@@ -102,9 +112,11 @@ def sage_forward(params, feats, batch, cfg: GCNConfig, *,
     flat1 = ids1.reshape(Pn, B * (1 + K1))
 
     # distributed step: fetch self features + aggregate 2-hop neighborhoods.
-    x_self = lookup_rows(feats, flat1, mesh=mesh, dataflow=cfg.dataflow)
+    x_self = lookup_rows(feats, flat1, mesh=mesh, dataflow=cfg.dataflow,
+                         impl=cfg.impl, request_chunk=cfg.request_chunk)
     x_agg = cgtrans.aggregate_sampled(
-        feats, batch["nbrs2"], batch["mask2"], mesh=mesh, dataflow=cfg.dataflow)
+        feats, batch["nbrs2"], batch["mask2"], mesh=mesh,
+        dataflow=cfg.dataflow, impl=cfg.impl, request_chunk=cfg.request_chunk)
 
     h1 = jnp.concatenate([x_self, x_agg], axis=-1)
     h1 = jax.nn.relu(jnp.einsum("pbf,fh->pbh", h1, params["w0"]) + params["b0"])

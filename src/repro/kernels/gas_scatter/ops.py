@@ -48,14 +48,18 @@ def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    if values.ndim == 1:
-        return gas_scatter(dst, values[:, None], n_rows, op=op,
-                           interpret=interpret)[:, 0]
     if op == "or":
-        # boolean-or over {0,1} = max with an or-identity of 0 for empty rows
+        # boolean-or over {0,1} = max with an or-identity of 0 for empty
+        # rows. The dtype rewrite happens exactly ONCE, before the ndim
+        # dispatch: rewriting after the 1-D recursion re-entered the public
+        # wrapper with op="or" still set, sending 1-D int values through the
+        # float32 max round-trip at both recursion depths.
         out = gas_scatter(dst, values.astype(jnp.float32), n_rows, op="max",
                           interpret=interpret)
         return jnp.maximum(out, 0).astype(values.dtype)
+    if values.ndim == 1:
+        return gas_scatter(dst, values[:, None], n_rows, op=op,
+                           interpret=interpret)[:, 0]
 
     E, F = values.shape
     et = K.EDGE_TILE_ADD if op == "add" else K.EDGE_TILE_CMP

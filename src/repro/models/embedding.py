@@ -7,7 +7,13 @@ tier". Two lookup dataflows:
   (CAM-match analogue: range-mask), gathers locally, and the only cross-shard
   traffic is a psum of the (B,S,D) *result* — aggregated-before-transmitted.
   The VJP is the exact mirror: output grads are scatter-added **at the owner
-  shard** (the paper's in-SSD aggregation), no raw table movement.
+  shard** (the paper's in-SSD aggregation), no raw table movement. The two
+  FAST-GAS knobs surface here too: ``impl="pallas"`` routes that owner-side
+  grad scatter through the FAST-GAS kernel (a custom VJP — the forward
+  gather is untouched), and ``request_chunk`` streams the token block
+  through the lookup ``request_chunk`` tokens at a time (the SSD
+  command-queue analogue), bounding the per-shard pre-psum partial at
+  (chunk, D) instead of (B·S, D).
 * **baseline** (plain ``take`` on the sharded table): GSPMD resolves the
   gather by materializing/collecting table shards — the "ship raw features
   over the bus" dataflow. Kept for the collective-byte comparison benches.
@@ -24,6 +30,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.common.logical import batch_axes
 from repro.compat import shard_map
+from repro.core import gas
+from repro.core.cgtrans import scan_request_chunks
 
 
 def _model_axis(mesh: Optional[Mesh]) -> Optional[str]:
@@ -32,9 +40,23 @@ def _model_axis(mesh: Optional[Mesh]) -> Optional[str]:
     return None
 
 
+def _rel_ok(ids_blk, lo, shard):
+    rel = jnp.clip(ids_blk - lo, 0, shard - 1)
+    ok = (ids_blk - lo >= 0) & (ids_blk - lo < shard)
+    return rel, ok
+
+
 def embed_lookup(table: jax.Array, ids: jax.Array, *, mesh: Optional[Mesh] = None,
-                 cgtrans: bool = True, compute_dtype=jnp.bfloat16) -> jax.Array:
-    """ids: (B, S) int32 → (B, S, D)."""
+                 cgtrans: bool = True, compute_dtype=jnp.bfloat16,
+                 impl: str = "xla",
+                 request_chunk: Optional[int] = None) -> jax.Array:
+    """ids: (B, S) int32 → (B, S, D).
+
+    ``impl`` selects the GAS backend for the owner-side embedding-grad
+    scatter of the cgtrans dataflow; ``request_chunk`` streams the flattened
+    token block through the lookup in chunks (SSD command-queue analogue).
+    Both are inert on the baseline/unsharded paths.
+    """
     axis = _model_axis(mesh)
     if not cgtrans or axis is None:
         return jnp.take(table, ids, axis=0).astype(compute_dtype)
@@ -51,21 +73,76 @@ def embed_lookup(table: jax.Array, ids: jax.Array, *, mesh: Optional[Mesh] = Non
     if dp and ids.shape[0] % dp_size:
         dp = ()   # replicate ids when the (micro)batch doesn't split evenly
 
+    def resolve(table_shard, rel, ok):
+        part = jnp.take(table_shard, rel, axis=0).astype(compute_dtype)
+        return lax.psum(part * ok[..., None].astype(compute_dtype), axis)
+
     def local(table_shard, ids_blk):
         lo = lax.axis_index(axis) * shard
-        rel = ids_blk - lo
-        ok = (rel >= 0) & (rel < shard)
-        rel = jnp.clip(rel, 0, shard - 1)
-        part = jnp.take(table_shard, rel, axis=0).astype(compute_dtype)
-        part = part * ok[..., None].astype(compute_dtype)
-        return lax.psum(part, axis)          # compressed transmission: (B,S,D)
+        rel, ok = _rel_ok(ids_blk, lo, shard)
+        if request_chunk is None:
+            return resolve(table_shard, rel, ok)             # (B, S, D)
 
-    return shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(axis, None), P(dp if dp else None, None)),
-        out_specs=P(dp if dp else None, None, None),
-    )(table, ids)
+        # chunked request stream: issue the flattened token block to the
+        # storage tier ``request_chunk`` tokens at a time (the scan/pad
+        # machinery is cgtrans's — each token is a K=1 request row)
+        B, S = ids_blk.shape
+        out = scan_request_chunks(
+            lambda rel_c, ok_c: resolve(table_shard, rel_c[:, 0], ok_c[:, 0]),
+            rel.reshape(-1, 1), ok.reshape(-1, 1), request_chunk)
+        return out.reshape(B, S, table_shard.shape[-1])
+
+    def sharded_lookup(tab, ids_):
+        return shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axis, None), P(dp if dp else None, None)),
+            out_specs=P(dp if dp else None, None, None),
+        )(tab, ids_)
+
+    if impl != "pallas":
+        return sharded_lookup(table, ids)
+
+    # impl="pallas": same forward, but the VJP is the paper's in-SSD grad
+    # aggregation — a forward-only shard_map in which every shard
+    # GAS-scatters the output cotangent into its owned rows through the
+    # FAST-GAS kernel, then psums over the batch axes. No transpose machinery
+    # touches the kernel (pallas_call has no shard_map replication rule, and
+    # the check-off transpose semantics are version-dependent), and no raw
+    # table rows ever cross the bus.
+    @jax.custom_vjp
+    def lookup(tab, ids_):
+        return sharded_lookup(tab, ids_)
+
+    def lookup_fwd(tab, ids_):
+        # the zero-size residual carries the table dtype into the bwd cast
+        return sharded_lookup(tab, ids_), (ids_, jnp.zeros((0,), tab.dtype))
+
+    def lookup_bwd(res, g):
+        import numpy as np
+        ids_, like = res
+
+        def scatter_body(g_blk, ids_blk):
+            lo = lax.axis_index(axis) * shard
+            rel, ok = _rel_ok(ids_blk, lo, shard)
+            gf = g_blk.reshape(-1, g_blk.shape[-1]).astype(jnp.float32)
+            dtab = gas.gas_scatter_weighted(
+                rel.reshape(-1), gf, jnp.ones((gf.shape[0],), jnp.float32),
+                ok.reshape(-1), shard, op="add", impl="pallas")
+            if dp:
+                dtab = lax.psum(dtab, dp)   # table is dp-replicated
+            return dtab
+
+        dtab = shard_map(
+            scatter_body, mesh=mesh,
+            in_specs=(P(dp if dp else None, None, None),
+                      P(dp if dp else None, None)),
+            out_specs=P(axis, None), check_vma=False,
+        )(g, ids_)
+        return dtab.astype(like.dtype), np.zeros(ids_.shape, jax.dtypes.float0)
+
+    lookup.defvjp(lookup_fwd, lookup_bwd)
+    return lookup(table, ids)
 
 
 def logits_matmul(x: jax.Array, table: jax.Array, *, softcap: float = 0.0,

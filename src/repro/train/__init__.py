@@ -1,4 +1,5 @@
 from repro.train.loop import train_loop
+from repro.train.pipeline import make_sage_train_step, pipelined_apply
 from repro.train.step import (
     batch_logical_specs,
     batch_structs,
@@ -14,5 +15,6 @@ from repro.train.step import (
 __all__ = [
     "train_loop", "batch_logical_specs", "batch_structs",
     "decode_logical_specs", "decode_structs", "init_state",
-    "make_decode_step", "make_prefill_step", "make_train_step", "state_schema",
+    "make_decode_step", "make_prefill_step", "make_sage_train_step",
+    "make_train_step", "pipelined_apply", "state_schema",
 ]

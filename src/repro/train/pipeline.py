@@ -1,14 +1,25 @@
-"""Pipeline parallelism over the ``pod`` axis (GPipe fill–drain schedule).
+"""Training pipelines: GPipe stage parallelism + the graph-workload step.
 
-At 512 chips none of the assigned configs *needs* PP (FSDP×TP fits them — see
-EXPERIMENTS §Dry-run), so this stage-parallel runner is off by default and
-exercised by tests. Stages = contiguous block ranges of the pattern-scan; the
-boundary transfer is a ``ppermute`` along ``pod``; microbatches stream through
-with a lax.scan (fill–drain = GPipe; jax autodiff differentiates through the
-ppermute, giving the reverse schedule for backward automatically).
+Two entry points:
 
-This composes with the data/model axes untouched: within a stage, everything
-keeps its FSDP×TP sharding.
+* ``pipelined_apply`` — pipeline parallelism over the ``pod`` axis (GPipe
+  fill–drain schedule). At 512 chips none of the assigned configs *needs* PP
+  (FSDP×TP fits them — see EXPERIMENTS §Dry-run), so this stage-parallel
+  runner is off by default and exercised by tests. Stages = contiguous block
+  ranges of the pattern-scan; the boundary transfer is a ``ppermute`` along
+  ``pod``; microbatches stream through with a lax.scan (fill–drain = GPipe;
+  jax autodiff differentiates through the ppermute, giving the reverse
+  schedule for backward automatically). Composes with the data/model axes
+  untouched: within a stage, everything keeps its FSDP×TP sharding.
+
+* ``make_sage_train_step`` — the paper's workload as a jit-able pipeline
+  stage: GraphSAGE + CGTrans loss/grad/AdamW against an owner-sharded
+  feature table. This is where the two FAST-GAS deployment knobs surface
+  into training: ``cfg.impl`` (GAS backend for every per-shard aggregation)
+  and ``cfg.request_chunk`` (SSD command-queue depth for the sampled
+  request stream) ride in on the ``GCNConfig`` — both callers
+  (``examples/train_graphsage.py``, the distributed test cases) build their
+  step through here instead of hand-rolling the grad/update composition.
 """
 
 from __future__ import annotations
@@ -21,8 +32,43 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.common.config import ModelConfig
+from repro.common.config import ModelConfig, TrainConfig
 from repro.compat import shard_map
+
+
+def make_sage_train_step(cfg, tc: TrainConfig, *, feats,
+                         mesh: Optional[Mesh] = None) -> Callable:
+    """(state, batch) → (state, metrics) for GraphSAGE + CGTrans training.
+
+    ``cfg`` is a ``repro.core.gcn.GCNConfig`` — its ``dataflow``, ``impl``
+    and ``request_chunk`` fields select the transmission dataflow, the GAS
+    backend and the request-stream chunking for every aggregation in the
+    step. ``feats`` is the owner-sharded (P, part, F) feature table (the
+    storage tier); ``state`` is ``{"params", "opt", "step"}``.
+
+    Note ``impl="pallas"`` is inference/benchmark-only: the kernel has no
+    VJP, so training steps must keep ``cfg.impl="xla"`` (asserted here
+    rather than failing deep inside autodiff).
+    """
+    from repro.core.gcn import sage_loss
+    from repro.optim import adamw_update
+
+    if cfg.impl != "xla":
+        raise ValueError(
+            "training differentiates through the aggregation; the FAST-GAS "
+            "pallas kernel has no VJP — use cfg.impl='xla' for train steps "
+            f"(got {cfg.impl!r})")
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: sage_loss(p, feats, batch, cfg, mesh=mesh),
+            has_aux=True)(state["params"])
+        new_p, new_opt, om = adamw_update(state["params"], grads,
+                                          state["opt"], tc)
+        return ({"params": new_p, "opt": new_opt, "step": state["step"] + 1},
+                {**metrics, **om, "total_loss": loss})
+
+    return train_step
 
 
 def split_stages(n_blocks: int, n_stages: int) -> Tuple[Tuple[int, int], ...]:

@@ -5,7 +5,17 @@ own fake-device count (see tests/distributed_cases.py)."""
 import numpy as np
 import pytest
 
+from _dist import run_distributed_case
+
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def pallas_parity_report():
+    """The full pallas/xla differential matrix on the real 8-way mesh — run
+    ONCE per session (it compiles ~40 shard_map programs); both
+    test_distributed.py and test_cgtrans_pallas.py assert against it."""
+    return run_distributed_case("cgtrans_pallas_parity", timeout=600)

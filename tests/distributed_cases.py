@@ -47,6 +47,85 @@ def case_cgtrans_equivalence():
     print("cgtrans equivalence ok")
 
 
+def case_cgtrans_pallas_parity():
+    """The full differential matrix on a REAL 8-way mesh: for every
+    (dataflow, op, path), impl="pallas" ≡ impl="xla" ≡ the single-shard
+    reference — with ragged (non-tile-aligned) per-shard edge counts, one
+    all-padded shard (mask all-False), int features for op="or", and the
+    chunked request stream checked against the unchunked one.
+
+    Prints one ``parity path=… flow=… op=… impl=… ok`` line per cell;
+    tests/test_cgtrans_pallas.py parses them into per-cell test results.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import cgtrans
+    from repro.graph import partition_by_src, uniform_graph, host_sample
+    from repro.launch.mesh import make_data_mesh
+
+    mesh = make_data_mesh(8)
+    rng = np.random.default_rng(0)
+    # E=1000 over 8 src-partitions → ragged live counts, padded to a
+    # non-tile-aligned per-shard E (not a multiple of any kernel tile)
+    g = uniform_graph(256, 1000, seed=1, n_features=16, weights=True)
+    pg = partition_by_src(g, 8)
+    feats = jnp.asarray(pg.features)
+    feats_int = (jnp.abs(feats) > 0.5).astype(jnp.int32)   # op="or" features
+    mask = np.asarray(pg.mask).copy()
+    mask[3] = False                                        # all-padded shard
+    mask = jnp.asarray(mask)
+    eargs = (jnp.asarray(pg.src), jnp.asarray(pg.dst), jnp.asarray(pg.weights),
+             mask)
+
+    def close(a, b, tag, tol=1e-3):
+        a = jnp.nan_to_num(a.astype(jnp.float32), posinf=9e9, neginf=-9e9)
+        b = jnp.nan_to_num(b.astype(jnp.float32), posinf=9e9, neginf=-9e9)
+        err = float(jnp.max(jnp.abs(a - b)))
+        assert err < tol, (tag, err)
+
+    for op in ("add", "max", "min", "or"):
+        f = feats_int if op == "or" else feats
+        ref = cgtrans.aggregate_edges(f, *eargs, mesh=None, op=op)
+        for flow in ("cgtrans", "baseline"):
+            for impl in ("xla", "pallas"):
+                out = jax.jit(lambda ff, *a, fl=flow, i=impl, o=op:
+                              cgtrans.aggregate_edges(
+                                  ff, *a, mesh=mesh, dataflow=fl, op=o,
+                                  impl=i))(f, *eargs)
+                close(out, ref, ("edges", flow, op, impl))
+                print(f"parity path=edges flow={flow} op={op} impl={impl} ok")
+
+    seeds = rng.integers(0, 256, 64).astype(np.int32)
+    nbrs, smask = host_sample(g, seeds, 10, seed=2)
+    nb = jnp.asarray(nbrs.reshape(8, 8, 10))
+    mk = np.asarray(smask.reshape(8, 8, 10)).copy()
+    mk[5] = False                                          # all-padded shard
+    mk = jnp.asarray(mk)
+    for op in ("add", "max", "min", "or"):
+        f = feats_int if op == "or" else feats
+        ref = cgtrans.aggregate_sampled(f, nb, mk, mesh=None, op=op)
+        for flow in ("cgtrans", "baseline"):
+            for impl in ("xla", "pallas"):
+                out = jax.jit(lambda ff, n_, m_, fl=flow, i=impl, o=op:
+                              cgtrans.aggregate_sampled(
+                                  ff, n_, m_, mesh=mesh, dataflow=fl, op=o,
+                                  impl=i))(f, nb, mk)
+                close(out, ref, ("sampled", flow, op, impl))
+                print(f"parity path=sampled flow={flow} op={op} impl={impl} ok")
+
+    # chunked request stream ≡ unchunked, on the mesh, both dataflows
+    ref = cgtrans.aggregate_sampled(feats, nb, mk, mesh=None)
+    for flow in ("cgtrans", "baseline"):
+        for chunk in (1, 3, 64):
+            out = jax.jit(lambda ff, n_, m_, fl=flow, c=chunk:
+                          cgtrans.aggregate_sampled(
+                              ff, n_, m_, mesh=mesh, dataflow=fl,
+                              request_chunk=c))(feats, nb, mk)
+            close(out, ref, ("chunked", flow, chunk))
+            print(f"parity path=sampled flow={flow} chunk={chunk} ok")
+    print("cgtrans pallas parity ok")
+
+
 def case_cgtrans_collective_bytes():
     """The paper's mechanism measured: cgtrans moves ≈ K× fewer collective
     bytes than baseline for fan-out K sampled aggregation."""
@@ -87,13 +166,20 @@ def case_embedding_cgtrans():
     got = jax.jit(lambda t, i: embed_lookup(t, i, mesh=mesh, cgtrans=True,
                                             compute_dtype=jnp.float32))(table, ids)
     np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)
-    # gradient: owner-aggregated scatter equals dense one-hot gradient
-    def loss(t):
-        e = embed_lookup(t, ids, mesh=mesh, cgtrans=True, compute_dtype=jnp.float32)
-        return jnp.sum(e * e)
-    g = jax.jit(jax.grad(loss))(table)
+    # gradient: owner-aggregated scatter equals dense one-hot gradient, on
+    # both GAS backends (pallas = the FAST-GAS kernel in the custom VJP) and
+    # with the chunked request stream on
     dense = jax.grad(lambda t: jnp.sum(jnp.take(t, ids, 0) ** 2))(table)
-    np.testing.assert_allclose(np.asarray(g), np.asarray(dense), atol=1e-4)
+    for impl in ("xla", "pallas"):
+        for chunk in (None, 5):
+            def loss(t, impl=impl, chunk=chunk):
+                e = embed_lookup(t, ids, mesh=mesh, cgtrans=True,
+                                 compute_dtype=jnp.float32, impl=impl,
+                                 request_chunk=chunk)
+                return jnp.sum(e * e)
+            g = jax.jit(jax.grad(loss))(table)
+            np.testing.assert_allclose(np.asarray(g), np.asarray(dense),
+                                       atol=1e-4, err_msg=f"{impl}/{chunk}")
     print("embedding cgtrans ok")
 
 
@@ -131,42 +217,41 @@ def case_elastic_checkpoint():
 
 
 def case_distributed_sage_training():
-    """2-layer GraphSAGE + CGTrans trains on an 8-way storage mesh."""
+    """2-layer GraphSAGE + CGTrans trains on an 8-way storage mesh — with
+    the chunked request stream on (the SSD command-queue analogue)."""
     import jax
     import jax.numpy as jnp
     from repro.common.config import TrainConfig
     from repro.common.schema import init_params
-    from repro.core.gcn import GCNConfig, gcn_schema, sage_loss
+    from repro.core.gcn import GCNConfig, gcn_schema
     from repro.data import GraphBatchStream, synthetic_node_labels
     from repro.graph import partition_by_src, uniform_graph
     from repro.launch.mesh import make_data_mesh
-    from repro.optim import adamw_init, adamw_update
+    from repro.optim import adamw_init
+    from repro.train import make_sage_train_step
 
     mesh = make_data_mesh(8)
     g = uniform_graph(512, 8192, seed=0, n_features=16)
     labels = synthetic_node_labels(g.features, 4)
     pg = partition_by_src(g, 8)
     feats = jnp.asarray(pg.features)
-    cfg = GCNConfig(n_features=16, hidden=32, n_classes=4, fanout=8)
+    cfg = GCNConfig(n_features=16, hidden=32, n_classes=4, fanout=8,
+                    request_chunk=8)
     tc = TrainConfig(learning_rate=5e-3, warmup_steps=5, total_steps=60,
                      weight_decay=0.0)
     params = init_params(gcn_schema(cfg), jax.random.PRNGKey(0))
-    opt = adamw_init(params, tc)
+    state = {"params": params, "opt": adamw_init(params, tc),
+             "step": jnp.zeros((), jnp.int32)}
     stream = GraphBatchStream(g, labels, n_parts=8, batch_per_part=16, k1=4, k2=4)
 
-    @jax.jit
-    def step(params, opt, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            lambda p: sage_loss(p, feats, batch, cfg, mesh=mesh), has_aux=True)(params)
-        params, opt, _ = adamw_update(params, grads, opt, tc)
-        return params, opt, metrics
+    step = jax.jit(make_sage_train_step(cfg, tc, feats=feats, mesh=mesh))
 
     losses = []
     for i, batch in zip(range(60), stream):
         b = {k: jnp.asarray(v) for k, v in batch.items()}
         b["mask1"] = b["mask1"].astype(bool)
         b["mask2"] = b["mask2"].astype(bool)
-        params, opt, m = step(params, opt, b)
+        state, m = step(state, b)
         losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] * 0.8, (losses[0], losses[-1])
     print(f"sage training ok: loss {losses[0]:.3f} -> {losses[-1]:.3f}")

@@ -7,46 +7,24 @@ All cases carry the ``distributed`` marker; deselect the ~4-minute subprocess
 suite with ``-m "not distributed"``.
 """
 
-import os
-import subprocess
-import sys
-
 import pytest
 
+# the runner lives in tests/_dist.py (shared with conftest.py's session
+# fixture for test_cgtrans_pallas.py)
+from _dist import run_distributed_case as _run
+
 pytestmark = pytest.mark.distributed
-
-_HERE = os.path.dirname(__file__)
-_SRC = os.path.join(_HERE, "..", "src")
-
-
-def _run(case: str, timeout=480):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    cmd = [sys.executable, os.path.join(_HERE, "distributed_cases.py"), case]
-    try:
-        proc = subprocess.run(cmd, capture_output=True, text=True,
-                              timeout=timeout, env=env)
-    except subprocess.TimeoutExpired as e:
-        pytest.fail(
-            f"case {case!r} timed out after {timeout}s\n"
-            f"--- captured stdout ---\n{e.stdout or ''}\n"
-            f"--- captured stderr ---\n{e.stderr or ''}",
-            pytrace=False)
-    if proc.returncode != 0:
-        # surface the child's traceback directly — an import/compat break in
-        # the subprocess must read as itself, not as `assert 1 == 0` around
-        # a CompletedProcess repr
-        pytest.fail(
-            f"case {case!r} exited {proc.returncode}\n"
-            f"--- child stdout ---\n{proc.stdout}\n"
-            f"--- child stderr ---\n{proc.stderr}",
-            pytrace=False)
-    return proc.stdout
 
 
 def test_cgtrans_equivalence():
     assert "ok" in _run("cgtrans_equivalence")
+
+
+def test_cgtrans_pallas_parity(pallas_parity_report):
+    """impl="pallas" ≡ impl="xla" ≡ single-shard reference across the full
+    (dataflow × op × path) matrix on the real 8-way mesh — see
+    tests/test_cgtrans_pallas.py for the per-cell breakdown."""
+    assert "cgtrans pallas parity ok" in pallas_parity_report
 
 
 def test_cgtrans_collective_bytes_compression():

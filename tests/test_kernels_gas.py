@@ -99,6 +99,30 @@ def test_weighted_or_ignores_weights(rng):
                                       err_msg=impl)
 
 
+def test_or_1d_int_values(rng):
+    """Regression: op="or" on 1-D int values used to recurse to 2-D with
+    op="or" still set, so the float32-max dtype rewrite ran at both
+    recursion depths; the rewrite now happens exactly once, before the ndim
+    dispatch. Pin the whole contract: result matches the int segment-max
+    oracle, dtype is preserved, empty rows hold the or-identity 0, and 1-D
+    agrees exactly with the equivalent 2-D call."""
+    E, R = 200, 40
+    dst = jnp.asarray(rng.integers(-2, R + 2, E).astype(np.int32))
+    val = jnp.asarray(rng.integers(0, 2, E).astype(np.int32))
+    got = gas_scatter(dst, val, R, op="or")
+    assert got.shape == (R,) and got.dtype == jnp.int32
+    ok = (np.asarray(dst) >= 0) & (np.asarray(dst) < R)
+    want = np.zeros(R, np.int32)
+    np.maximum.at(want, np.asarray(dst)[ok], np.asarray(val)[ok])
+    np.testing.assert_array_equal(np.asarray(got), want)
+    got2d = gas_scatter(dst, val[:, None], R, op="or")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2d)[:, 0])
+    # rows with no incoming edge hold 0 (the or-identity), not -inf/INT_MIN
+    untouched = np.setdiff1d(np.arange(R), np.asarray(dst)[ok])
+    if untouched.size:
+        np.testing.assert_array_equal(np.asarray(got)[untouched], 0)
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), e=st.integers(2, 200))
 def test_property_permutation_invariance(seed, e):
