@@ -18,7 +18,11 @@ Two measurements per run:
 * ``agg_time`` rows — the per-shard aggregation wall time of the sharded
   cgtrans dataflow with ``impl="xla"`` vs ``impl="pallas"`` (the FAST-GAS
   kernel; interpret-mode on CPU, so treat the absolute numbers as a
-  correctness-path comparison, not kernel speed).
+  correctness-path comparison, not kernel speed);
+* ``train_step_time`` rows — one full jitted GraphSAGE **train step**
+  (forward + backward + AdamW) on the 8-way mesh, ``impl="xla"`` vs
+  ``impl="pallas"`` — now that the kernel carries custom VJPs, the backward
+  runs through FAST-GAS too; same interpret-mode caveat applies.
 
 ``benchmarks/run.py`` runs this script and folds both into its CSV output.
 
@@ -112,6 +116,48 @@ def bench_agg_time(ways: int = 8, V: int = 256, E: int = 4096, F: int = 16,
     return rows
 
 
+def bench_train_step_time(ways: int = 8, reps: int = 3) -> list:
+    """Wall time of one jitted GraphSAGE+CGTrans TRAIN step on the sharded
+    mesh, impl="xla" vs impl="pallas" — the differentiable-kernel path
+    (forward and backward through FAST-GAS), actually executed."""
+    import jax.random
+    from repro.common.config import TrainConfig
+    from repro.common.schema import init_params
+    from repro.core.gcn import GCNConfig, gcn_schema
+    from repro.data import GraphBatchStream, synthetic_node_labels
+    from repro.graph import partition_by_src, uniform_graph
+    from repro.optim import adamw_init
+    from repro.train import make_sage_train_step
+
+    mesh = make_data_mesh(ways)
+    g = uniform_graph(128, 1024, seed=0, n_features=8)
+    labels = synthetic_node_labels(g.features, 4)
+    pg = partition_by_src(g, ways)
+    feats = jnp.asarray(pg.features)
+    tc = TrainConfig(learning_rate=1e-3)
+    stream = GraphBatchStream(g, labels, n_parts=ways, batch_per_part=4,
+                              k1=4, k2=4)
+    batch = {k: jnp.asarray(v) for k, v in stream.batch_at(0).items()}
+    rows = []
+    for impl in ("xla", "pallas"):
+        cfg = GCNConfig(n_features=8, hidden=16, n_classes=4, fanout=4,
+                        impl=impl)
+        params = init_params(gcn_schema(cfg), jax.random.PRNGKey(0))
+        state = {"params": params, "opt": adamw_init(params, tc),
+                 "step": jnp.zeros((), jnp.int32)}
+        step = jax.jit(make_sage_train_step(cfg, tc, feats=feats, mesh=mesh))
+        state, m = step(state, batch)            # compile + warm
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            state, m = step(state, batch)
+            jax.block_until_ready(state)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append({"mode": "train_step_time", "ways": ways, "impl": impl,
+                     "us": us, "loss": float(m["total_loss"])})
+    return rows
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--out", default="BENCH_collective_bytes.json")
@@ -159,6 +205,13 @@ def main(argv=None) -> int:
         rows.append(r)
         print(f"agg_time/{r['ways']}-way impl={r['impl']:<6s} "
               f"{r['us']:>10.0f}us total  {r['us_per_shard']:>9.0f}us/shard")
+
+    # one full train step (fwd + bwd + AdamW): the differentiable pallas
+    # path vs the xla oracle — the backward also runs through the kernel
+    for r in bench_train_step_time(8):
+        rows.append(r)
+        print(f"train_step/{r['ways']}-way impl={r['impl']:<6s} "
+              f"{r['us']:>10.0f}us/step  loss={r['loss']:.3f}")
 
     # the paper's claim, asserted: sampled compression ≈ fan-out (same
     # threshold as tests/distributed_cases.py::case_cgtrans_collective_bytes),

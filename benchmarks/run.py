@@ -132,8 +132,10 @@ def bench_collective_bytes(fast=False):
     keep this process single-device; it writes BENCH_collective_bytes.json).
     Emits one CSV row per sampled byte-ratio point — including the paper's
     K≈50 operating point of the ≈50× claim — plus the per-shard
-    aggregation-time column: the FAST-GAS pallas kernel vs the XLA oracle
-    inside the sharded cgtrans dataflow."""
+    aggregation-time and full train-step-time columns: the FAST-GAS pallas
+    kernel vs the XLA oracle inside the sharded cgtrans dataflow, forward
+    (agg_time) and forward+backward+AdamW (train_step, the differentiable
+    pallas path)."""
     import json
     import os
     import subprocess
@@ -174,6 +176,9 @@ def bench_collective_bytes(fast=False):
         elif r["mode"] == "agg_time":
             print(f"agg_time_{r['impl']},{r['us']:.0f},"
                   f"per_shard_us={r['us_per_shard']:.0f};ways={r['ways']}")
+        elif r["mode"] == "train_step_time":
+            print(f"train_step_{r['impl']},{r['us']:.0f},"
+                  f"loss={r['loss']:.3f};ways={r['ways']}")
     s = data["summary"]
     print(f"collective_bytes_summary,0.0,"
           f"{s['checked'] - s['failed']}/{s['checked']}_rows_pass;"

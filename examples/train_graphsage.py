@@ -42,6 +42,11 @@ def main():
     ap.add_argument("--batch-per-part", type=int, default=64)
     ap.add_argument("--dataflow", choices=["cgtrans", "baseline"],
                     default="cgtrans")
+    ap.add_argument("--impl", choices=["xla", "pallas"], default="xla",
+                    help="GAS backend for every aggregation — pallas runs "
+                         "the FAST-GAS kernel forward AND backward (custom "
+                         "VJPs; interpret-mode off-TPU, so expect it slow "
+                         "on CPU hosts)")
     ap.add_argument("--request-chunk", type=int, default=None,
                     help="SSD command-queue depth: seeds per sampled-"
                          "aggregation request burst (None = unchunked)")
@@ -65,13 +70,13 @@ def main():
 
     cfg = GCNConfig(n_features=args.features, hidden=args.hidden, n_classes=16,
                     fanout=args.fanout, dataflow=args.dataflow,
-                    request_chunk=args.request_chunk)
+                    impl=args.impl, request_chunk=args.request_chunk)
     tc = TrainConfig(learning_rate=3e-3, warmup_steps=20,
                      total_steps=args.steps, weight_decay=0.01)
     params = init_params(gcn_schema(cfg), jax.random.PRNGKey(0))
     print(f"model: {count_params(gcn_schema(cfg)) / 1e6:.2f}M params "
           f"(+{feats.size / 1e6:.1f}M feature table on the storage tier), "
-          f"dataflow={args.dataflow}")
+          f"dataflow={args.dataflow} impl={args.impl}")
 
     stream = GraphBatchStream(g, labels, n_parts=8,
                               batch_per_part=args.batch_per_part,

@@ -87,6 +87,31 @@ def main() -> int:
             f"Pallas interpret mode is non-functional on this JAX — the "
             f"impl='pallas' differential tier cannot run: {e!r}")
 
+    # -- Pallas interpret VJP (the differentiable FAST-GAS path) -----------
+    # the grad tier (tests/test_cgtrans_grad.py, ci.sh --tier grad) takes
+    # jax.grad THROUGH the kernel via the custom VJPs in repro.core.gas;
+    # probe that the backward traces and produces the known gradient here
+    try:
+        import jax
+        import jax.numpy as jnp
+        from repro.core import gas
+
+        dst = jnp.array([0, 1, 0], jnp.int32)
+        vals = jnp.ones((3, 2), jnp.float32)
+        w = jnp.array([1.0, 2.0, 3.0])
+        m = jnp.array([True, True, True])
+        g = jax.grad(lambda v: gas.gas_scatter_weighted(
+            dst, v, w, m, 2, op="add", impl="pallas").sum())(vals)
+        # d_vals[e] = w[e] (every row's cotangent is 1): sum = 2·(1+2+3)
+        assert float(g.sum()) == 12.0, float(g.sum())
+        rows.append(("pallas interpret VJP",
+                     "functional (grad-through-kernel probe ok)"))
+    except Exception as e:  # noqa: BLE001 — report, don't crash the report
+        rows.append(("pallas interpret VJP", "BROKEN"))
+        failures.append(
+            f"the pallas custom VJP does not trace on this JAX — the "
+            f"gradient-parity tier (impl='pallas' training) cannot run: {e!r}")
+
     # -- fake-device topology for the distributed cases --------------------
     flag = "--xla_force_host_platform_device_count=8"
     rows.append(("distributed tests",

@@ -6,6 +6,9 @@
 #   scripts/ci.sh --tier pallas          # the FAST-GAS differential suite
 #                                        # only, on 8 fake devices (the
 #                                        # pallas/xla parity lane)
+#   scripts/ci.sh --tier grad            # the gradient-parity tier only:
+#                                        # jax.grad through the pallas
+#                                        # kernel ≡ xla ≡ finite differences
 #   scripts/ci.sh -m "not distributed"   # extra args forwarded to pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -16,7 +19,7 @@ TIER="full"
 ARGS=()
 while [[ $# -gt 0 ]]; do
   if [[ "$1" == "--tier" ]]; then
-    TIER="${2:?--tier needs an argument (full|pallas)}"
+    TIER="${2:?--tier needs an argument (full|pallas|grad)}"
     shift 2
   else
     ARGS+=("$1")
@@ -38,8 +41,15 @@ case "$TIER" in
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
       python -m pytest -x -q tests/test_cgtrans_pallas.py ${ARGS[@]+"${ARGS[@]}"}
     ;;
+  grad)
+    # the gradient-parity tier: jax.grad through the FAST-GAS custom VJPs
+    # ≡ the xla oracle ≡ finite differences, chunked ≡ unchunked, plus the
+    # pallas train-step parity. Same topology note as the pallas lane.
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+      python -m pytest -x -q tests/test_cgtrans_grad.py ${ARGS[@]+"${ARGS[@]}"}
+    ;;
   *)
-    echo "unknown --tier '$TIER' (expected: full|pallas)" >&2
+    echo "unknown --tier '$TIER' (expected: full|pallas|grad)" >&2
     exit 2
     ;;
 esac

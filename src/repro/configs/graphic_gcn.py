@@ -8,8 +8,11 @@ from ``repro.core.cgtrans``: ``impl="pallas"`` runs every per-shard
 aggregation through the in-SSD kernel (interpret-mode off-TPU), and
 ``request_chunk`` is the SSD command-queue depth — the sampled dataflow
 streams its id block through the collectives that many seeds at a time,
-bounding per-shard peak gather memory. Training keeps ``impl="xla"`` (the
-kernel has no VJP); ``PALLAS_CONFIG`` is the inference/benchmark deployment.
+bounding per-shard peak gather memory. Both backends train end-to-end: the
+kernel carries custom VJPs whose backward is itself GAS work
+(``repro.core.gas``), so ``PALLAS_CONFIG`` is a full training deployment,
+not just the inference/benchmark one — gradient parity with ``CONFIG`` is
+asserted by ``tests/test_cgtrans_grad.py``.
 """
 
 import dataclasses
@@ -25,12 +28,13 @@ CONFIG = GCNConfig(
     aggregate="add",
     dataflow="cgtrans",
     n_layers=2,
-    impl="xla",        # oracle backend; differentiable (training default)
+    impl="xla",        # oracle backend (training default)
     request_chunk=None,  # unchunked: one request burst per batch
 )
 
 # The deployed FAST-GAS configuration: Pallas kernel aggregation + a 16-seed
-# command queue (peak gather memory ∝ 16·K·F instead of B_loc·K·F).
+# command queue (peak gather memory ∝ 16·K·F instead of B_loc·K·F). Trains
+# end-to-end — the kernel's custom VJPs keep the backward in-SSD too.
 PALLAS_CONFIG = dataclasses.replace(CONFIG, impl="pallas", request_chunk=16)
 
 # per-dataset feature widths (Table II) for benchmarks

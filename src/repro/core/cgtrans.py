@@ -29,6 +29,21 @@ K contributions), which ``tests/test_cgtrans_pallas.py`` asserts.
 
 ``benchmarks/collective_bytes.py`` lowers both on the production mesh and
 diffs the collective bytes in the compiled HLO — the mechanism, measured.
+
+**Both dataflows are differentiable on both backends.** The collectives
+(``psum_scatter``/``all_gather``/``all_to_all``) carry JAX's own transpose
+rules; the only op without one is ``pallas_call``, which is hidden behind the
+forward-only custom VJPs in ``repro.core.gas`` (the embedding-lookup
+pattern): the backward of the owner-side gather is a FAST-GAS scatter and
+the backward of the seed scatter is a masked weighted gather — the reverse
+pass is itself in-SSD GAS work, never a transpose through the kernel. Two
+consequences visible in this file: the non-add cross-shard combine of
+``aggregate_edges`` is an ``all_gather`` + local extremum (``lax.pmax`` has
+no differentiation rule at all), and ``_finalize``/``_combine_shards`` mask
+the ±inf max/min identity rows to 0 so no downstream ``0·inf`` ever turns a
+train-step gradient into NaN. The grad parity tier
+(``tests/test_cgtrans_grad.py``) asserts pallas ≡ xla ≡ finite differences
+across the whole matrix.
 """
 
 from __future__ import annotations
@@ -62,8 +77,13 @@ def _check_vma(impl: str) -> Optional[bool]:
 # ---------------------------------------------------------------------------
 
 def _agg_local(feats, src_local, dst_global, w, mask, n_vertices, op, impl):
-    """In-SSD step: local gather + segment-reduce into global dst bins."""
-    gathered = gas.gas_gather(feats, src_local)          # LOCAL by construction
+    """In-SSD step: local gather + segment-reduce into global dst bins.
+
+    ``impl`` threads into BOTH halves: under pallas the scatter's VJP is the
+    kernel's and the gather's VJP (a scatter of the feature cotangent) runs
+    through the kernel too — the backward stays in the in-SSD regime.
+    """
+    gathered = gas.gas_gather(feats, src_local, impl=impl)  # LOCAL by construction
     return gas.gas_scatter_weighted(
         dst_global, gathered, w, mask, n_vertices, op=op, impl=impl)
 
@@ -108,12 +128,17 @@ def aggregate_edges(
                 out = psum_scatter(partial.reshape(n, part, F), AXIS,
                                    scatter_dimension=0)
             else:
-                # max/min/or have no fused reduce-scatter; all-reduce then
-                # slice. or-partials are ≥ 0, so pmax realizes boolean-or.
-                out = (lax.pmax(partial, AXIS) if op in ("max", "or")
-                       else lax.pmin(partial, AXIS))
-                i = lax.axis_index(AXIS)
-                out = lax.dynamic_slice_in_dim(out.reshape(n, part, F), i, 1, 0)[0]
+                # max/min/or have no fused reduce-scatter; ship each owner
+                # its interval's partials (all_to_all: V·F bytes per shard,
+                # like the add path's reduce-scatter) and reduce locally.
+                # (Not lax.pmax/pmin: those have NO differentiation rule,
+                # while all_to_all is its own transpose — the grad tier
+                # differentiates this flow.) or-partials are ≥ 0, so max
+                # realizes boolean-or.
+                parts = lax.all_to_all(partial.reshape(n, part, F), AXIS,
+                                       split_axis=0, concat_axis=0,
+                                       tiled=False)          # (n, part, F)
+                out = parts.min(0) if op == "min" else parts.max(0)
             return out[None]
 
         return shard_map(
@@ -128,7 +153,7 @@ def aggregate_edges(
             # Weights scale contributions only under op="add" — max/min take
             # the raw feature and or ignores weights entirely (matching
             # gas_scatter_weighted, so baseline ≡ cgtrans ≡ reference).
-            raw = gas.gas_gather(f[0], s[0])
+            raw = gas.gas_gather(f[0], s[0], impl=impl)
             if op == "add":
                 raw = raw * w[0][:, None].astype(raw.dtype)
             raw = jnp.where(m[0][:, None], raw, 0)
@@ -166,7 +191,7 @@ def _seed_reduce(f_shard, rel, own, op: gas.Op, impl: str):
     identity (0 for add/or, ±inf for max/min). Also returns (R,) own counts.
     """
     R, K = rel.shape
-    rows = gas.gas_gather(f_shard, rel.reshape(-1))              # (R·K, F)
+    rows = gas.gas_gather(f_shard, rel.reshape(-1), impl=impl)   # (R·K, F)
     seed = jnp.repeat(jnp.arange(R, dtype=jnp.int32), K)
     red = gas.gas_scatter_weighted(
         seed, rows, jnp.ones((R * K,), jnp.float32), own.reshape(-1), R,
@@ -174,11 +199,27 @@ def _seed_reduce(f_shard, rel, own, op: gas.Op, impl: str):
     return red, own.sum(-1)
 
 
+def _mask_identity_rows(out, op: gas.Op):
+    """Zero the ±inf max/min identity rows (seeds with no valid sample).
+
+    Applied at every *terminal* finalize (never on pre-combine partials —
+    a shard with no sample for a seed must still contribute the identity to
+    the cross-shard extremum). Keeping ±inf here would make any downstream
+    use produce ``0·inf = NaN`` under autodiff — the classic silent
+    train-step NaN — so identity rows now read 0 on every op, matching
+    add/or, and their cotangent is cut at the ``where``.
+    """
+    if op in ("max", "min"):
+        return jnp.where(jnp.isfinite(out), out, 0)
+    return out
+
+
 def _finalize(red, cnt, op: gas.Op):
-    """Partial → output rows: mean for add, identity-passthrough otherwise."""
+    """Partial → output rows: mean for add, identity-masked passthrough
+    otherwise (terminal positions only — see ``aggregate_sampled``)."""
     if op == "add":
         return red / jnp.maximum(cnt, 1).astype(red.dtype)[..., None]
-    return red
+    return _mask_identity_rows(red, op)
 
 
 def _combine_shards(parts, cnts, op: gas.Op):
@@ -186,8 +227,8 @@ def _combine_shards(parts, cnts, op: gas.Op):
     if op == "add":
         return parts.sum(0) / jnp.maximum(cnts.sum(0), 1).astype(parts.dtype)[..., None]
     if op in ("max", "or"):
-        return parts.max(0)
-    return parts.min(0)
+        return _mask_identity_rows(parts.max(0), op)
+    return _mask_identity_rows(parts.min(0), op)
 
 
 def _pad_rows(x, mult, fill):
@@ -235,10 +276,13 @@ def aggregate_sampled(
     """Returns (P, B_loc, F) aggregated neighbor features per seed.
 
     ``op="add"`` is the masked *mean* (GraphSAGE); max/min/or reduce
-    elementwise over the valid samples (seeds with no valid sample hold the
-    op identity: ±inf for max/min, 0 for or). ``impl`` selects the GAS
-    backend for every per-shard reduction; ``request_chunk`` streams the seed
-    block through the collectives ``request_chunk`` seeds at a time.
+    elementwise over the valid samples. Seeds with no valid sample read 0 on
+    every op — the ±inf max/min identities are masked at the terminal
+    finalize (``_mask_identity_rows``) so autodiff never meets ``0·inf``.
+    ``impl`` selects the GAS backend for every per-shard reduction (both
+    backends differentiate; under pallas the backward runs through the
+    FAST-GAS kernel); ``request_chunk`` streams the seed block through the
+    collectives ``request_chunk`` seeds at a time.
     """
     if dataflow not in ("cgtrans", "baseline"):
         raise ValueError(dataflow)
@@ -291,7 +335,8 @@ def aggregate_sampled(
 
             # baseline: ship raw (n·C·K, F) neighbor rows to the seed owners,
             # reduce there ("the accelerator") — also through the GAS engine.
-            rows = gas.gas_gather(f, relc.reshape(-1)).reshape(n, C, K, F)
+            rows = gas.gas_gather(f, relc.reshape(-1), impl=impl
+                                  ).reshape(n, C, K, F)
             rows = jnp.where(own[..., None], rows, 0)
             raw = lax.all_to_all(rows, AXIS, split_axis=0, concat_axis=0,
                                  tiled=False)                 # (n, C, K, F)

@@ -19,6 +19,27 @@ Public primitives (all fixed-shape, jit-friendly):
 ``impl`` selects the backend: "xla" (jnp reference semantics, the oracle) or
 "pallas" (the kernel, interpret-mode on CPU). Kernels live in
 ``repro.kernels.gas_scatter``.
+
+**Differentiation (the backward pass is also GAS work).** ``pallas_call``
+has no transpose rule, so the pallas backend carries ``jax.custom_vjp``
+rules here — the same forward-only pattern the embedding lookup proved
+(``repro.models.embedding``): fwd and bwd are each plain forward kernel
+dispatches, and no transpose machinery ever touches the kernel. The rules
+exploit the paper's own symmetry:
+
+  * the backward of a scatter-add is a *gather* — the cotangent-to-values of
+    ``gas_scatter_weighted(op="add")`` is a masked weighted gather of the
+    output cotangent, and the cotangent-to-weights is a per-edge row-dot;
+  * the backward of a gather is a *scatter* — ``gas_gather(impl="pallas")``
+    scatter-adds its cotangent rows through the FAST-GAS kernel;
+  * for ``op="max"/"min"`` the cotangent is routed through a recomputed
+    ``gas_match``-style equality mask against the saved output — the CAM
+    consumed as a grad router (match lines gate the cotangent directly,
+    never priority-decoded into argmax addresses) — with the tie count
+    itself produced by a kernel scatter, matching XLA's even-split-among-
+    ties convention; ``op="or"`` is flat almost everywhere (the XLA oracle
+    differentiates to exact zeros through its int cast), so its cotangents
+    are zeros.
 """
 
 from __future__ import annotations
@@ -28,6 +49,7 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Op = Literal["add", "max", "min", "or"]
 
@@ -59,7 +81,9 @@ def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
 
     Rows with no incoming edge hold the op identity for max/min (±inf) — mask
     with a degree count if needed. ``impl="pallas"`` routes through the
-    FAST-GAS kernel (CAM match + MXU one-hot contraction + idle-skip).
+    FAST-GAS kernel (CAM match + MXU one-hot contraction + idle-skip); that
+    raw kernel entry is forward-only — differentiate through
+    ``gas_scatter_weighted``/``gas_gather``, which carry the custom VJPs.
     """
     if impl == "pallas":
         from repro.kernels.gas_scatter import ops as gas_ops
@@ -67,8 +91,58 @@ def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
     return _segment_reduce_xla(dst, values, n_rows, op)
 
 
-def gas_gather(table: jax.Array, ids: jax.Array) -> jax.Array:
-    """Row gather — local by construction under the src-owner partition."""
+def _zero_cotangent(x: jax.Array):
+    """Symbolic-zero cotangent with the right tangent type: float zeros for
+    inexact primals, ``float0`` for int/bool primals (ids, masks)."""
+    if jnp.issubdtype(x.dtype, jnp.inexact):
+        return jnp.zeros_like(x)
+    return np.zeros(np.shape(x), jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# gather (+ its kernel-routed VJP: the backward of a gather is a scatter)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _gather_pallas(n_rows: int):
+    """Row gather whose VJP scatter-adds the cotangent through the FAST-GAS
+    kernel — the in-SSD grad aggregation (no raw table rows move in either
+    direction, and no XLA scatter silently replaces the kernel)."""
+
+    @jax.custom_vjp
+    def gather(table, ids):
+        return jnp.take(table, ids, axis=0)
+
+    def fwd(table, ids):
+        # the zero-size residual carries the table dtype into the bwd cast
+        return gather(table, ids), (ids, jnp.zeros((0,), table.dtype))
+
+    def bwd(res, g):
+        ids, like = res
+        gf = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+        dtab = gas_scatter(ids.reshape(-1), gf, n_rows, op="add", impl="pallas")
+        return dtab.astype(like.dtype), np.zeros(np.shape(ids), jax.dtypes.float0)
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def gas_gather(table: jax.Array, ids: jax.Array, *, impl: str = "xla") -> jax.Array:
+    """Row gather — local by construction under the src-owner partition.
+
+    ``impl="pallas"`` keeps the forward a plain take but routes the VJP's
+    scatter-add (the backward of a gather IS a scatter) through the FAST-GAS
+    kernel, so the reverse pass of a dataflow stays in the in-SSD regime.
+    """
+    if impl == "pallas":
+        if table.ndim != 2:
+            # a silent jnp.take fallback here would hand the backward to an
+            # XLA scatter — the exact regression the grad tier forbids
+            raise NotImplementedError(
+                f"gas_gather(impl='pallas') routes its VJP through the "
+                f"FAST-GAS kernel and requires a 2-D (rows, F) table; got "
+                f"ndim={table.ndim}. Use impl='xla' for other ranks.")
+        return _gather_pallas(table.shape[0])(table, ids)
     return jnp.take(table, ids, axis=0)
 
 
@@ -77,20 +151,20 @@ def gas_match(keys: jax.Array, queries: jax.Array) -> jax.Array:
 
     This is the decoder-free use the paper argues for: the match lines are
     consumed directly as row-enable masks (here: a mask/one-hot fed straight
-    into the compute), never priority-decoded into addresses.
+    into the compute), never priority-decoded into addresses. The max/min
+    VJP below consumes the same match-line idea as a *grad router*.
     """
     return queries[:, None] == keys[None, :]
 
 
-def gas_scatter_weighted(dst: jax.Array, src_vals: jax.Array, weights: jax.Array,
-                         mask: jax.Array, n_rows: int, *, op: Op = "add",
-                         impl: str = "xla") -> jax.Array:
-    """Masked, edge-weighted scatter — the paper's aggregation atom.
+# ---------------------------------------------------------------------------
+# weighted scatter (+ its custom VJP for the pallas backend)
+# ---------------------------------------------------------------------------
 
-    src_vals: (E, F); weights/mask: (E,). Invalid edges are routed to a
-    dead row (n_rows) and sliced off, keeping shapes static.
-    """
-    E = dst.shape[0]
+def _scatter_weighted_impl(dst, src_vals, weights, mask, n_rows, op: Op,
+                           impl: str):
+    """The primal computation shared by both backends (see the public
+    ``gas_scatter_weighted`` for semantics)."""
     if op in ("max", "min"):
         fill = jnp.asarray(_INIT[op], src_vals.dtype)
         vals = jnp.where(mask[:, None], src_vals, fill)
@@ -104,3 +178,94 @@ def gas_scatter_weighted(dst: jax.Array, src_vals: jax.Array, weights: jax.Array
     safe_dst = jnp.where(mask, dst, n_rows)
     out = gas_scatter(safe_dst, vals, n_rows + 1, op=op, impl=impl)
     return out[:n_rows]
+
+
+@functools.lru_cache(maxsize=None)
+def _scatter_weighted_pallas(n_rows: int, op: Op):
+    """``gas_scatter_weighted`` on the kernel backend with a custom VJP.
+
+    The rules mirror what autodiff derives for the XLA oracle — the grad
+    parity tier (``tests/test_cgtrans_grad.py``) asserts the match:
+
+      add      d_vals[e]  = mask[e] · w[e] · g[dst[e]]      (weighted gather)
+               d_w[e]     = mask[e] · ⟨src_vals[e], g[dst[e]]⟩      (row-dot)
+      max/min  d_vals[e,f] = eq[e,f] · g[dst[e],f] / ties[dst[e],f]
+               with eq = mask ∧ (src_vals == out[dst]) — the CAM match lines
+               recomputed against the saved output and consumed as the grad
+               router (no argmax decode); ties counted by a kernel scatter,
+               matching XLA's even-split convention. d_w = 0 (weights are
+               not consumed by the compare ops).
+    Both the tie-count scatter and (via ``gas_gather(impl="pallas")`` at the
+    dataflow layer) the feature-table scatter run through the FAST-GAS
+    kernel: the backward pass is itself GAS work. (``op="or"`` never reaches
+    here — it is flat, so the public entry stops gradients instead of
+    carrying residuals for an all-zero bwd.)
+    """
+
+    @jax.custom_vjp
+    def scatter(dst, src_vals, weights, mask):
+        return _scatter_weighted_impl(dst, src_vals, weights, mask,
+                                      n_rows, op, "pallas")
+
+    def fwd(dst, src_vals, weights, mask):
+        out = _scatter_weighted_impl(dst, src_vals, weights, mask,
+                                     n_rows, op, "pallas")
+        res = (dst, src_vals, weights, mask) + ((out,) if op in ("max", "min")
+                                                else ())
+        return out, res
+
+    def bwd(res, g):
+        dst, src_vals, weights, mask = res[:4]
+        d_dst = _zero_cotangent(dst)
+        d_mask = _zero_cotangent(mask)
+        safe = jnp.clip(dst, 0, n_rows - 1)       # masked edges read junk rows
+        g_rows = jnp.take(g, safe, axis=0)        # …zeroed by the mask below
+        if op == "add":
+            d_vals = jnp.where(mask[:, None],
+                               g_rows * weights[:, None].astype(g.dtype),
+                               0).astype(src_vals.dtype)
+            d_w = jnp.where(
+                mask,
+                (src_vals.astype(jnp.float32) * g_rows.astype(jnp.float32)
+                 ).sum(-1),
+                0).astype(weights.dtype)
+            return d_dst, d_vals, d_w, d_mask
+
+        out = res[4]
+        # CAM match lines as the grad router: an edge's value participates in
+        # the row extremum iff it equals the saved output there (and is live)
+        eq = mask[:, None] & (src_vals == jnp.take(out, safe, axis=0))
+        # tie count via the kernel — the backward scatter is itself FAST-GAS
+        # work; masked/out-of-range edges ride the dead-row convention
+        ties = gas_scatter(jnp.where(mask, dst, n_rows),
+                           eq.astype(jnp.float32), n_rows + 1,
+                           op="add", impl="pallas")[:n_rows]
+        share = g_rows / jnp.maximum(jnp.take(ties, safe, axis=0), 1.0)
+        d_vals = jnp.where(eq, share, 0).astype(src_vals.dtype)
+        return d_dst, d_vals, _zero_cotangent(weights), d_mask
+
+    scatter.defvjp(fwd, bwd)
+    return scatter
+
+
+def gas_scatter_weighted(dst: jax.Array, src_vals: jax.Array, weights: jax.Array,
+                         mask: jax.Array, n_rows: int, *, op: Op = "add",
+                         impl: str = "xla") -> jax.Array:
+    """Masked, edge-weighted scatter — the paper's aggregation atom.
+
+    src_vals: (E, F); weights/mask: (E,). Invalid edges are routed to a
+    dead row (n_rows) and sliced off, keeping shapes static. Differentiable
+    on BOTH backends: the XLA oracle through native autodiff, the pallas
+    kernel through the custom VJP above (pallas ≡ xla gradients is asserted
+    by ``tests/test_cgtrans_grad.py``).
+    """
+    if impl == "pallas":
+        if op == "or":
+            # flat almost everywhere (the oracle differentiates to exact
+            # zeros through its int cast): stop the gradients instead of
+            # paying custom-VJP residuals for an all-zero backward
+            return _scatter_weighted_impl(
+                dst, jax.lax.stop_gradient(src_vals),
+                jax.lax.stop_gradient(weights), mask, n_rows, op, impl)
+        return _scatter_weighted_pallas(n_rows, op)(dst, src_vals, weights, mask)
+    return _scatter_weighted_impl(dst, src_vals, weights, mask, n_rows, op, impl)

@@ -71,7 +71,9 @@ def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
             h, src_local, dst_global, weights, mask,
             mesh=mesh, dataflow=cfg.dataflow, op=cfg.aggregate,
             impl=impl or cfg.impl)
-        if cfg.aggregate == "max":
+        if cfg.aggregate in ("max", "min"):
+            # vertices with no in-edges hold the ±inf identity; mask before
+            # the combine so neither the forward nor the cotangent meets inf
             agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
         h = jnp.concatenate([h, agg], axis=-1)
         h = jax.nn.relu(jnp.einsum("pvf,fh->pvh", h, params[f"w{i}"]) + params[f"b{i}"])

@@ -17,6 +17,12 @@ tier". Two lookup dataflows:
 * **baseline** (plain ``take`` on the sharded table): GSPMD resolves the
   gather by materializing/collecting table shards — the "ship raw features
   over the bus" dataflow. Kept for the collective-byte comparison benches.
+
+This module's forward-only custom VJP was the proof-of-pattern for the
+differentiable FAST-GAS path: ``repro.core.gas`` now carries the same
+backward-is-also-GAS rules for the graph aggregations themselves
+(``gas_scatter_weighted``/``gas_gather``), which is what lets
+``make_sage_train_step`` run ``impl="pallas"`` end-to-end.
 """
 
 from __future__ import annotations

@@ -46,18 +46,15 @@ def make_sage_train_step(cfg, tc: TrainConfig, *, feats,
     step. ``feats`` is the owner-sharded (P, part, F) feature table (the
     storage tier); ``state`` is ``{"params", "opt", "step"}``.
 
-    Note ``impl="pallas"`` is inference/benchmark-only: the kernel has no
-    VJP, so training steps must keep ``cfg.impl="xla"`` (asserted here
-    rather than failing deep inside autodiff).
+    ``impl="pallas"`` trains end-to-end: the FAST-GAS kernel carries custom
+    VJPs (``repro.core.gas``) whose backward is itself in-SSD GAS work — a
+    backward scatter through the kernel for the gathers, a masked weighted
+    gather for the scatter — so the reverse pass never leaves the regime
+    the forward models. Per-step gradient parity with ``impl="xla"`` is
+    locked in by ``tests/test_cgtrans_grad.py``.
     """
     from repro.core.gcn import sage_loss
     from repro.optim import adamw_update
-
-    if cfg.impl != "xla":
-        raise ValueError(
-            "training differentiates through the aggregation; the FAST-GAS "
-            "pallas kernel has no VJP — use cfg.impl='xla' for train steps "
-            f"(got {cfg.impl!r})")
 
     def train_step(state, batch):
         (loss, metrics), grads = jax.value_and_grad(

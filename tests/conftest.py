@@ -19,3 +19,12 @@ def pallas_parity_report():
     ONCE per session (it compiles ~40 shard_map programs); both
     test_distributed.py and test_cgtrans_pallas.py assert against it."""
     return run_distributed_case("cgtrans_pallas_parity", timeout=600)
+
+
+@pytest.fixture(scope="session")
+def grad_parity_report():
+    """The GRADIENT differential matrix on the real 8-way mesh (plus the
+    3-step pallas-vs-xla train parity) — run ONCE per session (each cell is
+    a jax.grad shard_map compilation); test_cgtrans_grad.py asserts each
+    cell against this shared stdout."""
+    return run_distributed_case("cgtrans_grad_parity", timeout=900)

@@ -27,6 +27,14 @@ def test_cgtrans_pallas_parity(pallas_parity_report):
     assert "cgtrans pallas parity ok" in pallas_parity_report
 
 
+def test_cgtrans_grad_parity(grad_parity_report):
+    """jax.grad through impl="pallas" ≡ impl="xla" ≡ single-shard reference
+    across (dataflow × op × path × chunking) on the real 8-way mesh, plus
+    the 3-step pallas-vs-xla train parity — see tests/test_cgtrans_grad.py
+    for the per-cell breakdown."""
+    assert "cgtrans grad parity ok" in grad_parity_report
+
+
 def test_cgtrans_collective_bytes_compression():
     out = _run("cgtrans_collective_bytes")
     assert "ratio" in out
