@@ -11,20 +11,36 @@ CGTrans ships O(B·F) — the ratio tracks the fan-out K, reproducing the
 paper's fan-in compression at the paper's own operating point (K≈50, the
 ``paper_figure`` row, asserted ≥ 30×).
 
-Two measurements per run:
+Measurements per run:
 
 * byte rows — compile-time only (HLO diffing), seconds on the 8-way
-  fake-device CPU topology;
+  fake-device CPU topology. The 1-way points are skipped: a single shard
+  has zero collective bytes by construction, so their ``ratio=0`` rows were
+  degenerate noise in the JSON.
 * ``agg_time`` rows — the per-shard aggregation wall time of the sharded
-  cgtrans dataflow with ``impl="xla"`` vs ``impl="pallas"`` (the FAST-GAS
-  kernel; interpret-mode on CPU, so treat the absolute numbers as a
-  correctness-path comparison, not kernel speed);
+  cgtrans dataflow: ``impl="xla"`` vs ``impl="pallas"`` unscheduled vs
+  ``impl="pallas"`` with the destination-binned edge schedule
+  (``build_edge_schedule`` hoisted, the multi-layer deployment — the
+  counting sort is paid once per (partition, batch), which is what
+  ``gcn_forward_full`` does). Timings are interleaved best-of-N: this box
+  shares 2 cores across 8 fake devices and run-to-run noise exceeds the
+  effect, so the minimum is the only stable estimator.
+* ``sched_build`` row — the one-time cost of building that schedule.
+* ``skip_rate`` rows — the idle-skip mechanism, counted not timed: live vs
+  total (row-block × edge-tile) rounds on a clustered graph, scheduled
+  (banded walk) vs unscheduled (dense occupancy). Paper Fig 11(c).
 * ``train_step_time`` rows — one full jitted GraphSAGE **train step**
   (forward + backward + AdamW) on the 8-way mesh, ``impl="xla"`` vs
-  ``impl="pallas"`` — now that the kernel carries custom VJPs, the backward
-  runs through FAST-GAS too; same interpret-mode caveat applies.
+  ``impl="pallas"`` scheduled/unscheduled — the kernel carries custom VJPs,
+  so the backward runs through FAST-GAS too.
 
-``benchmarks/run.py`` runs this script and folds both into its CSV output.
+Interpret-mode caveat: off-TPU the kernel runs in the Pallas interpreter,
+which pays a fixed emulation cost per grid round and per dispatch; treat
+absolute pallas-vs-xla times as a correctness-path comparison biased
+AGAINST the kernel (native XLA scatters pay none of that), and read the
+``skip_rate`` rows for the mechanism the schedule buys on hardware.
+
+``benchmarks/run.py`` runs this script and folds the rows into its CSV.
 
 Run:  PYTHONPATH=src python benchmarks/collective_bytes.py [--out PATH]
 """
@@ -92,34 +108,111 @@ def bench_full_graph(ways: int, F: int, V: int = 256, E: int = 4096) -> dict:
     return row
 
 
-def bench_agg_time(ways: int = 8, V: int = 256, E: int = 4096, F: int = 16,
-                   reps: int = 3) -> list:
-    """Per-shard aggregation wall time of the sharded cgtrans dataflow,
-    impl="xla" vs impl="pallas" (the FAST-GAS kernel) — actually executed,
-    not just lowered."""
+def _interleaved_min_us(fns: dict, run_one, trials: int = 9,
+                        reps: int = 3) -> dict:
+    """Best-of-N wall time per labelled fn, trials interleaved so machine
+    drift (this box: 2 cores under 8 fake devices) hits every candidate
+    equally. Returns label → best mean-of-reps in µs."""
+    best = {k: float("inf") for k in fns}
+    for _ in range(trials):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                run_one(fn)
+            best[k] = min(best[k], (time.perf_counter() - t0) / reps * 1e6)
+    return best
+
+
+def bench_agg_time(ways: int = 8, V: int = 256, E: int = 4096,
+                   F: int = 16) -> list:
+    """Per-shard aggregation wall time of the sharded cgtrans dataflow:
+    impl="xla" vs impl="pallas" unscheduled vs scheduled (hoisted
+    destination-binned schedule — the multi-layer deployment). Actually
+    executed, not just lowered; interleaved best-of-N timing."""
     mesh = make_data_mesh(ways)
     g = uniform_graph(V, E, seed=1, n_features=F, weights=True)
     pg = partition_by_src(g, ways)
     args = (jnp.asarray(pg.features), jnp.asarray(pg.src), jnp.asarray(pg.dst),
             jnp.asarray(pg.weights), jnp.asarray(pg.mask))
-    rows = []
-    for impl in ("xla", "pallas"):
-        fn = jax.jit(lambda *a, i=impl: cgtrans.aggregate_edges(
-            *a, mesh=mesh, dataflow="cgtrans", impl=i))
-        jax.block_until_ready(fn(*args))             # compile + warm
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            jax.block_until_ready(fn(*args))
-        us = (time.perf_counter() - t0) / reps * 1e6
-        rows.append({"mode": "agg_time", "ways": ways, "V": V, "E": E, "F": F,
-                     "impl": impl, "us": us, "us_per_shard": us / ways})
+
+    build = jax.jit(lambda d, m: cgtrans.build_edge_schedule(
+        d, m, V, mesh=mesh))
+    sched = jax.block_until_ready(build(args[2], args[4]))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(build(args[2], args[4]))
+    sched_us = (time.perf_counter() - t0) / 5 * 1e6
+    # the schedule is paid once per (partition, batch): the edge list is
+    # restructured here (SGCN-style) and every timed call consumes it
+    s_args = (args[0],) + cgtrans.apply_edge_schedule(sched, *args[1:])
+
+    f_xla = jax.jit(lambda *a: cgtrans.aggregate_edges(
+        *a, mesh=mesh, dataflow="cgtrans", impl="xla"))
+    f_uns = jax.jit(lambda *a: cgtrans.aggregate_edges(
+        *a, mesh=mesh, dataflow="cgtrans", impl="pallas", scheduled=False))
+    f_sch = jax.jit(lambda *a: cgtrans.aggregate_edges(
+        *a, mesh=mesh, dataflow="cgtrans", impl="pallas",
+        schedule=sched, schedule_applied=True))
+    fns = {
+        ("xla", False): lambda: jax.block_until_ready(f_xla(*args)),
+        ("pallas", False): lambda: jax.block_until_ready(f_uns(*args)),
+        ("pallas", True): lambda: jax.block_until_ready(f_sch(*s_args)),
+    }
+    for fn in fns.values():
+        fn()                                         # compile + warm
+    best = _interleaved_min_us(fns, lambda fn: fn())
+    rows = [{"mode": "agg_time", "ways": ways, "V": V, "E": E, "F": F,
+             "impl": impl, "scheduled": scheduled, "us": us,
+             "us_per_shard": us / ways}
+            for (impl, scheduled), us in best.items()]
+    rows.append({"mode": "sched_build", "ways": ways, "V": V, "E": E,
+                 "us": sched_us})
     return rows
 
 
-def bench_train_step_time(ways: int = 8, reps: int = 3) -> list:
+def bench_skip_rate(ways: int = 8, V: int = 1024, E: int = 16384) -> list:
+    """The idle-skip mechanism, counted: live vs total (row-block ×
+    edge-tile) rounds per shard on a CLUSTERED graph (paper Fig 11(c)'s
+    favorable case), scheduled (banded walk) vs unscheduled (dense
+    occupancy bitmap). Uniform graphs are the adversary — shown alongside."""
+    from repro.graph import clustered_graph
+    from repro.kernels.gas_scatter import kernel as K
+    from repro.kernels.gas_scatter import (dense_skip_stats, schedule_edges,
+                                           schedule_skip_stats)
+
+    rows = []
+    for graph_kind, g in (
+            ("clustered", clustered_graph(V, E, n_clusters=V // K.ROW_BLOCK,
+                                          p_intra=0.9, seed=3)),
+            ("uniform", uniform_graph(V, E, seed=3))):
+        pg = partition_by_src(g, ways)
+        live_s = total_s = live_u = total_u = 0
+        for p in range(ways):
+            dst = jnp.asarray(pg.dst[p])
+            mask = jnp.asarray(pg.mask[p])
+            ls, ts = schedule_skip_stats(schedule_edges(dst, mask, V))
+            live_s += ls
+            total_s += ts
+            lu, tu = dense_skip_stats(dst, mask, V)
+            live_u += lu
+            total_u += tu
+        for scheduled, live, total in ((True, live_s, total_s),
+                                       (False, live_u, total_u)):
+            rows.append({
+                "mode": "skip_rate", "ways": ways, "V": V, "E": E,
+                "graph": graph_kind, "scheduled": scheduled,
+                "live_rounds": live, "total_rounds": total,
+                "skipped_rounds": total - live,
+                "skip_rate": 1.0 - live / total,
+            })
+    return rows
+
+
+def bench_train_step_time(ways: int = 8) -> list:
     """Wall time of one jitted GraphSAGE+CGTrans TRAIN step on the sharded
-    mesh, impl="xla" vs impl="pallas" — the differentiable-kernel path
-    (forward and backward through FAST-GAS), actually executed."""
+    mesh, impl="xla" vs impl="pallas" scheduled/unscheduled — the
+    differentiable-kernel path (forward and backward through FAST-GAS),
+    actually executed; interleaved best-of-N timing."""
     import jax.random
     from repro.common.config import TrainConfig
     from repro.common.schema import init_params
@@ -138,24 +231,30 @@ def bench_train_step_time(ways: int = 8, reps: int = 3) -> list:
     stream = GraphBatchStream(g, labels, n_parts=ways, batch_per_part=4,
                               k1=4, k2=4)
     batch = {k: jnp.asarray(v) for k, v in stream.batch_at(0).items()}
-    rows = []
-    for impl in ("xla", "pallas"):
+
+    runs = {}
+    for key in (("xla", False), ("pallas", True), ("pallas", False)):
+        impl, scheduled = key
         cfg = GCNConfig(n_features=8, hidden=16, n_classes=4, fanout=4,
-                        impl=impl)
+                        impl=impl, scheduled=scheduled)
         params = init_params(gcn_schema(cfg), jax.random.PRNGKey(0))
         state = {"params": params, "opt": adamw_init(params, tc),
                  "step": jnp.zeros((), jnp.int32)}
         step = jax.jit(make_sage_train_step(cfg, tc, feats=feats, mesh=mesh))
         state, m = step(state, batch)            # compile + warm
         jax.block_until_ready(state)
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            state, m = step(state, batch)
-            jax.block_until_ready(state)
-        us = (time.perf_counter() - t0) / reps * 1e6
-        rows.append({"mode": "train_step_time", "ways": ways, "impl": impl,
-                     "us": us, "loss": float(m["total_loss"])})
-    return rows
+        runs[key] = {"step": step, "state": state,
+                     "loss": float(m["total_loss"])}
+
+    def run_one(r):
+        r["state"], _ = r["step"](r["state"], batch)
+        jax.block_until_ready(r["state"])
+
+    best = _interleaved_min_us(runs, run_one, trials=7, reps=3)
+    return [{"mode": "train_step_time", "ways": ways, "impl": impl,
+             "scheduled": scheduled, "us": best[(impl, scheduled)],
+             "loss": runs[(impl, scheduled)]["loss"]}
+            for impl, scheduled in runs]
 
 
 def main(argv=None) -> int:
@@ -180,8 +279,11 @@ def main(argv=None) -> int:
         print(f"{tag:34s} baseline={row['baseline']:>12.0f}B "
               f"cgtrans={row['cgtrans']:>12.0f}B ratio={row['ratio']:.1f}")
 
-    # mesh scaling at the reference point (K=16, F=128)
-    for ways in (1, 2, 4, 8):
+    # mesh scaling at the reference point (K=16, F=128). The 1-way point is
+    # intentionally absent: one shard moves zero collective bytes, so its
+    # baseline=0/ratio=0 row carried no information (and polluted ratio
+    # consumers downstream).
+    for ways in (2, 4, 8):
         emit(bench_sampled(ways, K=16, F=128))
         emit(bench_full_graph(ways, F=16))
 
@@ -200,17 +302,34 @@ def main(argv=None) -> int:
             emit(bench_sampled(8, K=16, F=F))
 
     # per-shard aggregation time: the FAST-GAS kernel inside the sharded
-    # dataflow vs the XLA oracle (executed on the 8-way fake mesh)
-    for r in bench_agg_time(8):
+    # dataflow vs the XLA oracle (executed on the 8-way fake mesh),
+    # scheduled (banded walk, hoisted schedule) vs unscheduled
+    agg_rows = bench_agg_time(8)
+    for r in agg_rows:
         rows.append(r)
-        print(f"agg_time/{r['ways']}-way impl={r['impl']:<6s} "
-              f"{r['us']:>10.0f}us total  {r['us_per_shard']:>9.0f}us/shard")
+        if r["mode"] == "sched_build":
+            print(f"sched_build/{r['ways']}-way "
+                  f"{r['us']:>10.0f}us (once per partition+batch)")
+        else:
+            tag = "sched" if r["scheduled"] else "unsched"
+            print(f"agg_time/{r['ways']}-way impl={r['impl']:<6s} {tag:<7s} "
+                  f"{r['us']:>10.0f}us total  {r['us_per_shard']:>9.0f}us/shard")
+
+    # the idle-skip mechanism, counted: scheduled vs dense rounds on a
+    # clustered graph (the paper's Fig 11(c) case) and its uniform adversary
+    for r in bench_skip_rate(8):
+        rows.append(r)
+        tag = "sched" if r["scheduled"] else "unsched"
+        print(f"skip_rate/{r['graph']:<9s} {tag:<7s} "
+              f"{r['live_rounds']:>5d}/{r['total_rounds']:<5d} rounds live  "
+              f"skip_rate={r['skip_rate']:.2f}")
 
     # one full train step (fwd + bwd + AdamW): the differentiable pallas
     # path vs the xla oracle — the backward also runs through the kernel
     for r in bench_train_step_time(8):
         rows.append(r)
-        print(f"train_step/{r['ways']}-way impl={r['impl']:<6s} "
+        tag = "sched" if r["scheduled"] else "unsched"
+        print(f"train_step/{r['ways']}-way impl={r['impl']:<6s} {tag:<7s} "
               f"{r['us']:>10.0f}us/step  loss={r['loss']:.3f}")
 
     # the paper's claim, asserted: sampled compression ≈ fan-out (same
@@ -223,6 +342,10 @@ def main(argv=None) -> int:
                      PAPER_MIN_RATIO if r.get("paper_figure") else 0.0)
         if r["ratio"] <= thresh:
             failures.append((r, thresh))
+    agg = {(r["impl"], r.get("scheduled")): r["us"] for r in rows
+           if r["mode"] == "agg_time"}
+    sk = [r for r in rows if r["mode"] == "skip_rate"
+          and r["graph"] == "clustered" and r["scheduled"]]
     summary = {
         "claim": "baseline/cgtrans collective bytes > K/4 on the 8-way mesh; "
                  f">= {PAPER_MIN_RATIO}x at the paper's K={PAPER_K}",
@@ -230,7 +353,33 @@ def main(argv=None) -> int:
         "failed": len(failures),
         "max_ratio": max((r["ratio"] for r in checked), default=0.0),
         "paper_figure_ratio": paper_row["ratio"],
+        # the scheduler headline: scheduled pallas vs xla vs unscheduled
+        # pallas aggregation time (interleaved best-of-N; see the module
+        # docstring for the interpret-mode caveat) + clustered skip rate
+        "agg_pallas_sched_vs_xla":
+            agg[("pallas", True)] / agg[("xla", False)],
+        "agg_sched_vs_unsched_pallas":
+            agg[("pallas", True)] / agg[("pallas", False)],
+        "clustered_skipped_rounds": sk[0]["skipped_rounds"] if sk else 0,
     }
+    # the scheduler mechanism, asserted DETERMINISTICALLY (round counts,
+    # not wall times — timing on this topology is an estimator, the counts
+    # are the claim): the scheduled walk on the clustered graph must skip
+    # rounds, and execute strictly fewer than the unscheduled occupancy
+    # leaves live
+    sk_rows = {(r["graph"], r["scheduled"]): r for r in rows
+               if r["mode"] == "skip_rate"}
+    cs = sk_rows[("clustered", True)]
+    cu = sk_rows[("clustered", False)]
+    mech_failures = []
+    if cs["skipped_rounds"] <= 0:
+        mech_failures.append("scheduled walk skipped zero rounds on the "
+                             "clustered graph")
+    if cs["live_rounds"] >= cu["live_rounds"]:
+        mech_failures.append(
+            f"scheduled live rounds ({cs['live_rounds']}) not below the "
+            f"unscheduled occupancy ({cu['live_rounds']})")
+
     out = {"jax_version": jax.__version__, "devices": n_dev,
            "rows": rows, "summary": summary}
     with open(args.out, "w") as f:
@@ -238,11 +387,14 @@ def main(argv=None) -> int:
     print(f"\nwrote {args.out}: {len(rows)} rows; "
           f"{summary['checked'] - summary['failed']}/{summary['checked']} "
           f"sampled rows beat their threshold "
-          f"(max ratio {summary['max_ratio']:.1f}×)")
-    if failures:
+          f"(max ratio {summary['max_ratio']:.1f}×); clustered idle-skip "
+          f"{cs['skipped_rounds']}/{cs['total_rounds']} rounds skipped")
+    if failures or mech_failures:
         for r, thresh in failures:
             print(f"FAIL: K={r['K']} F={r['F']} ratio={r['ratio']:.2f} "
                   f"≤ {thresh:.1f}", file=sys.stderr)
+        for msg in mech_failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
         return 1
     return 0
 

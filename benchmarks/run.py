@@ -174,15 +174,23 @@ def bench_collective_bytes(fast=False):
                   f"ratio={r['ratio']:.1f}x;baseline={r['baseline']:.0f}B;"
                   f"cgtrans={r['cgtrans']:.0f}B")
         elif r["mode"] == "agg_time":
-            print(f"agg_time_{r['impl']},{r['us']:.0f},"
+            tag = "_sched" if r.get("scheduled") else ""
+            print(f"agg_time_{r['impl']}{tag},{r['us']:.0f},"
                   f"per_shard_us={r['us_per_shard']:.0f};ways={r['ways']}")
+        elif r["mode"] == "skip_rate":
+            tag = "sched" if r["scheduled"] else "unsched"
+            print(f"skip_rate_{r['graph']}_{tag},0.0,"
+                  f"live={r['live_rounds']}/{r['total_rounds']};"
+                  f"skip_rate={r['skip_rate']:.2f}")
         elif r["mode"] == "train_step_time":
-            print(f"train_step_{r['impl']},{r['us']:.0f},"
+            tag = "_sched" if r.get("scheduled") else ""
+            print(f"train_step_{r['impl']}{tag},{r['us']:.0f},"
                   f"loss={r['loss']:.3f};ways={r['ways']}")
     s = data["summary"]
     print(f"collective_bytes_summary,0.0,"
           f"{s['checked'] - s['failed']}/{s['checked']}_rows_pass;"
-          f"paper_fig_ratio={s.get('paper_figure_ratio', 0.0):.1f}x")
+          f"paper_fig_ratio={s.get('paper_figure_ratio', 0.0):.1f}x;"
+          f"agg_sched_vs_xla={s.get('agg_pallas_sched_vs_xla', 0.0):.2f}")
 
 
 def bench_kernels(fast=False):

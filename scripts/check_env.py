@@ -112,6 +112,36 @@ def main() -> int:
             f"the pallas custom VJP does not trace on this JAX — the "
             f"gradient-parity tier (impl='pallas' training) cannot run: {e!r}")
 
+    # -- fused + scheduled kernel (the locality-scheduled fast path) -------
+    # the scheduler tier (tests/test_gas_schedule.py, ci.sh --tier sched)
+    # runs the fused weighted kernel through the destination-binned banded
+    # walk; probe that it traces in interpret mode and produces the known
+    # weighted scatter so a broken scalar-prefetch path fails HERE
+    try:
+        import jax.numpy as jnp
+        from repro.kernels.gas_scatter import (gas_scatter_fused,
+                                               schedule_edges)
+
+        dst = jnp.array([2, 0, 2, 9], jnp.int32)
+        msk = jnp.array([True, True, True, False])
+        w = jnp.array([1.0, 2.0, 3.0, 4.0])
+        vals = jnp.ones((4, 2), jnp.float32)
+        sched = schedule_edges(dst, msk, 10)
+        p = sched.perm
+        out = gas_scatter_fused(dst[p], vals[p], w[p], msk[p], 10, op="add",
+                                schedule=sched)
+        # row 2 gets w0+w2 = 4, row 0 gets w1 = 2, the masked edge nothing
+        assert float(out[2, 0]) == 4.0 and float(out[0, 0]) == 2.0, out
+        assert float(out.sum()) == 12.0, out
+        rows.append(("pallas fused+scheduled",
+                     "functional (banded-walk probe ok)"))
+    except Exception as e:  # noqa: BLE001 — report, don't crash the report
+        rows.append(("pallas fused+scheduled", "BROKEN"))
+        failures.append(
+            f"the fused/scheduled FAST-GAS dispatch does not trace on this "
+            f"JAX — the scheduler tier (ci.sh --tier sched) cannot run: "
+            f"{e!r}")
+
     # -- fake-device topology for the distributed cases --------------------
     flag = "--xla_force_host_platform_device_count=8"
     rows.append(("distributed tests",

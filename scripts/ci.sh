@@ -9,6 +9,10 @@
 #   scripts/ci.sh --tier grad            # the gradient-parity tier only:
 #                                        # jax.grad through the pallas
 #                                        # kernel ≡ xla ≡ finite differences
+#   scripts/ci.sh --tier sched           # the edge-scheduler tier only:
+#                                        # schedule invariants, fused kernel
+#                                        # ≡ oracle, scheduled ≡ unscheduled
+#                                        # bit-exact, idle-skip counters
 #   scripts/ci.sh -m "not distributed"   # extra args forwarded to pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -19,7 +23,7 @@ TIER="full"
 ARGS=()
 while [[ $# -gt 0 ]]; do
   if [[ "$1" == "--tier" ]]; then
-    TIER="${2:?--tier needs an argument (full|pallas|grad)}"
+    TIER="${2:?--tier needs an argument (full|pallas|grad|sched)}"
     shift 2
   else
     ARGS+=("$1")
@@ -48,8 +52,15 @@ case "$TIER" in
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
       python -m pytest -x -q tests/test_cgtrans_grad.py ${ARGS[@]+"${ARGS[@]}"}
     ;;
+  sched)
+    # the scheduler-parity tier: destination-binned schedule invariants,
+    # the fused weighted kernel vs the jnp oracle, scheduled ≡ unscheduled
+    # bit-exactness (values AND gradients), and the idle-skip round
+    # counters on clustered graphs. Single-process (no mesh needed).
+    python -m pytest -x -q tests/test_gas_schedule.py ${ARGS[@]+"${ARGS[@]}"}
+    ;;
   *)
-    echo "unknown --tier '$TIER' (expected: full|pallas|grad)" >&2
+    echo "unknown --tier '$TIER' (expected: full|pallas|grad|sched)" >&2
     exit 2
     ;;
 esac

@@ -27,6 +27,23 @@ paper's SSD command-queue analogue — bounding per-shard peak gather memory at
 bit-exact with the unchunked one (chunking partitions *seeds*, never a seed's
 K contributions), which ``tests/test_cgtrans_pallas.py`` asserts.
 
+**Locality scheduling.** ``scheduled`` (default: on whenever
+``impl="pallas"``) runs the paper's Fig 11(c) locality pass before the
+per-shard reduction: ``gas.schedule_edges`` counting-sorts each shard's edge
+stream by destination row block, the dataflow permutes the edge LIST once
+(ids/weights/mask — O(E) ints; the gathered value stream then arrives binned
+for free), and the kernel's idle-skip occupancy collapses to a thin band so
+``pl.when`` actually skips. ``build_edge_schedule`` computes the schedule
+once per (partition, batch) for reuse across layers (``gcn_forward_full``
+hoists it out of its layer loop) and the backward pass; cotangents to the
+permuted inputs un-permute through the transpose of the ``take`` that
+applied the permutation, so gradients are schedule-invariant
+(``tests/test_gas_schedule.py`` asserts bit-exactness on integer data). The
+sampled path's seed rows are binned by construction, so its schedule is
+sort-free (``assume_sorted``). The baseline dataflow schedules its
+destination-side reduction after raw assembly (its shipped bytes are
+unchanged — scheduling is always collective-neutral).
+
 ``benchmarks/collective_bytes.py`` lowers both on the production mesh and
 diffs the collective bytes in the compiled HLO — the mechanism, measured.
 
@@ -72,20 +89,75 @@ def _check_vma(impl: str) -> Optional[bool]:
     return False if impl == "pallas" else None
 
 
+def _resolve_scheduled(scheduled: Optional[bool], impl: str) -> bool:
+    """The locality pass defaults on exactly where it pays: the kernel."""
+    return (impl == "pallas") if scheduled is None else bool(scheduled)
+
+
+def _permuted(sched, *arrays):
+    """Apply an edge schedule's permutation to per-edge arrays. Autodiff
+    transposes the ``take`` into the exact un-permuting scatter, so
+    cotangents to weights (and values) return in original edge order."""
+    return tuple(jnp.take(a, sched.perm, axis=0) for a in arrays)
+
+
+def is_sharded(mesh: Optional[Mesh]) -> bool:
+    return (mesh is not None and AXIS in mesh.axis_names
+            and mesh.shape[AXIS] > 1)
+
+
+def build_edge_schedule(dst_global: jax.Array, mask: jax.Array,
+                        n_vertices: int, *, mesh: Optional[Mesh] = None):
+    """Destination-binned edge schedule for (P, E) edge arrays — computed
+    ONCE per (partition, batch) and reused across layers, feature blocks,
+    and the backward pass (pass it to ``aggregate_edges(schedule=...)``).
+
+    On a sharded mesh the schedule is per-shard (every leaf keeps the
+    leading P axis and shards with the edges); on the single-shard
+    reference path it is one schedule over the flattened edge list.
+    """
+    if not is_sharded(mesh):
+        return gas.schedule_edges(dst_global.reshape(-1), mask.reshape(-1),
+                                  n_vertices)
+    return jax.vmap(
+        lambda d, m: gas.schedule_edges(d, m, n_vertices))(dst_global, mask)
+
+
+def apply_edge_schedule(schedule, *edge_arrays):
+    """Reorder per-shard (P, E) edge arrays into schedule order, ONCE.
+
+    This is the SGCN-style data-format restructuring: pay the permutation
+    at partition time, then every layer's aggregation (and its backward)
+    consumes the binned edge list directly — pass the results to
+    ``aggregate_edges(..., schedule=..., schedule_applied=True)``. Only
+    meaningful for per-shard schedules (sharded-mesh layout); local src
+    ids, weights and masks all permute shard-locally.
+    """
+    return tuple(
+        jax.vmap(lambda a, p: jnp.take(a, p, axis=0), in_axes=(0, 0))(
+            a, schedule.perm)
+        for a in edge_arrays)
+
+
 # ---------------------------------------------------------------------------
 # full-graph edge aggregation (GCN):  out[v] = Σ_{(u,v,w)∈E} w · feats[u]
 # ---------------------------------------------------------------------------
 
-def _agg_local(feats, src_local, dst_global, w, mask, n_vertices, op, impl):
+def _agg_local(feats, src_local, dst_global, w, mask, n_vertices, op, impl,
+               schedule=None):
     """In-SSD step: local gather + segment-reduce into global dst bins.
 
     ``impl`` threads into BOTH halves: under pallas the scatter's VJP is the
     kernel's and the gather's VJP (a scatter of the feature cotangent) runs
     through the kernel too — the backward stays in the in-SSD regime.
+    ``schedule``: banded idle-skip bounds for edge arrays that are already
+    in schedule order (the caller permutes the edge list, so the gather
+    emits the value stream binned).
     """
     gathered = gas.gas_gather(feats, src_local, impl=impl)  # LOCAL by construction
     return gas.gas_scatter_weighted(
-        dst_global, gathered, w, mask, n_vertices, op=op, impl=impl)
+        dst_global, gathered, w, mask, n_vertices, op=op, impl=impl,
+        schedule=schedule)
 
 
 def aggregate_edges(
@@ -99,29 +171,62 @@ def aggregate_edges(
     dataflow: str = "cgtrans",      # cgtrans | baseline
     op: gas.Op = "add",
     impl: str = "xla",
+    scheduled: Optional[bool] = None,   # None → on for impl="pallas"
+    schedule=None,                      # precomputed build_edge_schedule(...)
+    schedule_applied: bool = False,     # edge arrays already in perm order
 ) -> jax.Array:
-    """Returns (P, part, F) aggregated destination features, owner-sharded."""
+    """Returns (P, part, F) aggregated destination features, owner-sharded.
+
+    ``scheduled`` runs the destination-binning locality pass before the
+    per-shard reduction (see the module docstring); ``schedule`` supplies a
+    precomputed ``build_edge_schedule`` result so multi-layer callers pay
+    the counting sort once, and ``schedule_applied=True`` declares the edge
+    arrays are ALREADY in schedule order (``apply_edge_schedule`` paid the
+    permutation at partition time; sharded-mesh cgtrans flow only). The
+    baseline dataflow bins its destination-side reduction after raw
+    assembly (a precomputed V-space schedule does not apply there and is
+    ignored).
+    """
     Pn, part, F = feats.shape
     V = Pn * part
+    use_sched = _resolve_scheduled(scheduled, impl) or schedule is not None
+    if schedule_applied:
+        assert schedule is not None, "schedule_applied requires schedule="
 
-    if mesh is None or AXIS not in mesh.axis_names or mesh.shape[AXIS] == 1:
+    if not is_sharded(mesh):
         # single-shard reference: both dataflows degenerate to one reduction
-        out = _agg_local(
-            feats.reshape(V, F),
-            (src_local + (jnp.arange(Pn) * part)[:, None]).reshape(-1),
-            dst_global.reshape(-1), weights.reshape(-1), mask.reshape(-1),
-            V, op, impl)
+        assert not schedule_applied, (
+            "schedule_applied is a sharded-mesh layout (per-shard perms); "
+            "the single-shard path flattens partitions and permutes itself")
+        s = (src_local + (jnp.arange(Pn) * part)[:, None]).reshape(-1)
+        d, w, m = (dst_global.reshape(-1), weights.reshape(-1),
+                   mask.reshape(-1))
+        sched = None
+        if use_sched:
+            sched = (schedule if schedule is not None
+                     else gas.schedule_edges(d, m, V))
+            s, d, w, m = _permuted(sched, s, d, w, m)
+        out = _agg_local(feats.reshape(V, F), s, d, w, m, V, op, impl,
+                         schedule=sched)
         return out.reshape(Pn, part, F)
 
     n = mesh.shape[AXIS]
     assert Pn == n, f"partitions ({Pn}) must equal data-axis size ({n})"
 
     if dataflow == "cgtrans":
-        def shard_fn(f, s, d, w, m):
+        def shard_fn(f, s, d, w, m, *pre_sched):
             # f: (1, part, F); edge arrays (1, E). Per-shard E need not be
             # tile-aligned — the kernel wrapper pads and rebuilds the
             # occupancy map per shard from this shard's (padded) dst ids.
-            partial = _agg_local(f[0], s[0], d[0], w[0], m[0], V, op, impl)
+            s, d, w, m = s[0], d[0], w[0], m[0]
+            sched = None
+            if use_sched:
+                sched = (jax.tree.map(lambda a: a[0], pre_sched[0])
+                         if pre_sched else gas.schedule_edges(d, m, V))
+                if not schedule_applied:
+                    s, d, w, m = _permuted(sched, s, d, w, m)
+            partial = _agg_local(f[0], s, d, w, m, V, op, impl,
+                                 schedule=sched)
             # compressed transmission: reduce-scatter the (V, F) partials so
             # each shard receives exactly its owned interval, aggregated.
             if op == "add":
@@ -141,11 +246,15 @@ def aggregate_edges(
                 out = parts.min(0) if op == "min" else parts.max(0)
             return out[None]
 
+        args = (feats, src_local, dst_global, weights, mask)
+        specs = (P(AXIS),) * 5
+        if schedule is not None:
+            args += (schedule,)
+            specs += (P(AXIS),)
         return shard_map(
-            shard_fn, mesh=mesh,
-            in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+            shard_fn, mesh=mesh, in_specs=specs,
             out_specs=P(AXIS), check_vma=_check_vma(impl),
-        )(feats, src_local, dst_global, weights, mask)
+        )(*args)
 
     if dataflow == "baseline":
         def shard_fn(f, s, d, w, m):
@@ -164,9 +273,18 @@ def aggregate_edges(
             lo = lax.axis_index(AXIS) * part
             rel = all_dst.reshape(-1) - lo
             ok = all_m.reshape(-1) & (rel >= 0) & (rel < part)
+            vals = all_raw.reshape(-1, F)
+            sched = None
+            if use_sched:
+                # baseline bins AFTER assembly: the scatter's row space is
+                # this owner's interval, which only exists post-all_gather
+                # (a precomputed V-space schedule cannot serve it)
+                sched = gas.schedule_edges(rel, ok, part)
+                rel, ok, vals = _permuted(sched, rel, ok, vals)
             out = gas.gas_scatter_weighted(
-                jnp.clip(rel, 0, part - 1), all_raw.reshape(-1, F),
-                jnp.ones_like(rel, jnp.float32), ok, part, op=op, impl=impl)
+                jnp.clip(rel, 0, part - 1), vals,
+                jnp.ones_like(rel, jnp.float32), ok, part, op=op, impl=impl,
+                schedule=sched)
             return out[None]
 
         return shard_map(
@@ -182,20 +300,55 @@ def aggregate_edges(
 # sampled GraphSAGE aggregation: out[b] = reduce_k feats[nbrs[b, k]]
 # ---------------------------------------------------------------------------
 
-def _seed_reduce(f_shard, rel, own, op: gas.Op, impl: str):
+def _op_identity(dtype, op: gas.Op):
+    """The reduction identity a no-sample row must hold, per dtype — matches
+    the segment-reduce empty-segment convention (±inf on floats, the integer
+    extremes on ints, 0 for add/or)."""
+    if op in ("add", "or"):
+        return jnp.zeros((), dtype)
+    if jnp.issubdtype(dtype, jnp.inexact):
+        return jnp.asarray(gas._INIT[op], dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.asarray(info.min if op == "max" else info.max, dtype)
+
+
+def _seed_reduce(f_shard, rel, own, op: gas.Op, impl: str,
+                 scheduled: bool = False):
     """Per-request-block GAS reduction: (R, K) local ids → (R, F) partials.
 
     This is the in-SSD step of the sampled path — the seed index is the
     destination row, so the fan-out reduction is exactly a FAST-GAS scatter
     (``impl`` selects the backend). Rows with no owned neighbor hold the op
     identity (0 for add/or, ±inf for max/min). Also returns (R,) own counts.
+    The seed stream ``repeat(arange(R), K)`` is destination-binned by
+    construction, so ``scheduled`` derives the idle-skip band sort-free
+    (``assume_sorted``) — no permutation is ever applied here.
     """
     R, K = rel.shape
     rows = gas.gas_gather(f_shard, rel.reshape(-1), impl=impl)   # (R·K, F)
+    if K == 1:
+        # a single-sample request block is a pure *find*: the seed scatter
+        # would be the identity permutation, so the reduction degenerates to
+        # masking the gathered row with the op identity — no kernel
+        # round-trip (the gather's VJP still scatters through the kernel
+        # under pallas). This is the row-lookup path of ``sage_forward``.
+        if op == "or":
+            # mirror the scatter path's boolean-or normalization exactly:
+            # int-cast the value, clamp the or-identity at 0 (a raw
+            # passthrough would leak negative/fractional values)
+            red = jnp.where(own.reshape(R, 1),
+                            jnp.maximum(rows.astype(jnp.int32), 0),
+                            0).astype(rows.dtype)
+        else:
+            red = jnp.where(own.reshape(R, 1), rows,
+                            _op_identity(rows.dtype, op))
+        return red, own.sum(-1)
     seed = jnp.repeat(jnp.arange(R, dtype=jnp.int32), K)
+    sched = (gas.schedule_edges(seed, own.reshape(-1), R, assume_sorted=True)
+             if scheduled else None)
     red = gas.gas_scatter_weighted(
         seed, rows, jnp.ones((R * K,), jnp.float32), own.reshape(-1), R,
-        op=op, impl=impl)
+        op=op, impl=impl, schedule=sched)
     return red, own.sum(-1)
 
 
@@ -272,6 +425,7 @@ def aggregate_sampled(
     op: gas.Op = "add",
     impl: str = "xla",
     request_chunk: Optional[int] = None,
+    scheduled: Optional[bool] = None,   # None → on for impl="pallas"
 ) -> jax.Array:
     """Returns (P, B_loc, F) aggregated neighbor features per seed.
 
@@ -282,18 +436,21 @@ def aggregate_sampled(
     ``impl`` selects the GAS backend for every per-shard reduction (both
     backends differentiate; under pallas the backward runs through the
     FAST-GAS kernel); ``request_chunk`` streams the seed block through the
-    collectives ``request_chunk`` seeds at a time.
+    collectives ``request_chunk`` seeds at a time; ``scheduled`` turns the
+    per-shard reductions' idle-skip occupancy into the sort-free banded form
+    (seed rows are destination-binned by construction).
     """
     if dataflow not in ("cgtrans", "baseline"):
         raise ValueError(dataflow)
     Pn, part, F = feats.shape
     _, B_loc, K = nbrs.shape
+    use_sched = _resolve_scheduled(scheduled, impl)
 
-    if mesh is None or AXIS not in mesh.axis_names or mesh.shape[AXIS] == 1:
+    if not is_sharded(mesh):
         table = feats.reshape(Pn * part, F)
 
         def body(nb_c, m_c):
-            red, cnt = _seed_reduce(table, nb_c, m_c, op, impl)
+            red, cnt = _seed_reduce(table, nb_c, m_c, op, impl, use_sched)
             return _finalize(red, cnt, op)
 
         flat_nb = nbrs.reshape(Pn * B_loc, K)
@@ -322,7 +479,8 @@ def aggregate_sampled(
             if dataflow == "cgtrans":
                 # in-SSD aggregation: GAS-reduce per seed, ship (n·C, F)
                 red, cnt = _seed_reduce(
-                    f, relc.reshape(n * C, K), own.reshape(n * C, K), op, impl)
+                    f, relc.reshape(n * C, K), own.reshape(n * C, K), op,
+                    impl, use_sched)
                 parts = lax.all_to_all(red.reshape(n, C, F), AXIS,
                                        split_axis=0, concat_axis=0, tiled=False)
                 if op == "add":
@@ -345,9 +503,11 @@ def aggregate_sampled(
             flat = raw.transpose(1, 0, 2, 3).reshape(C * n * K, F)
             okf = okk.transpose(1, 0, 2).reshape(C * n * K)
             seed = jnp.repeat(jnp.arange(C, dtype=jnp.int32), n * K)
+            sched = (gas.schedule_edges(seed, okf, C, assume_sorted=True)
+                     if use_sched else None)
             red = gas.gas_scatter_weighted(
                 seed, flat, jnp.ones((C * n * K,), jnp.float32), okf, C,
-                op=op, impl=impl)
+                op=op, impl=impl, schedule=sched)
             return _finalize(red, okf.reshape(C, n * K).sum(-1), op)
 
         if request_chunk is None:

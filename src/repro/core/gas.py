@@ -40,12 +40,26 @@ exploit the paper's own symmetry:
     ties convention; ``op="or"`` is flat almost everywhere (the XLA oracle
     differentiates to exact zeros through its int cast), so its cotangents
     are zeros.
+
+**Locality scheduling (the idle-skip actually firing).** ``schedule_edges``
+bins the edge stream by destination row block (paper Fig 11(c)): with binned
+edges each kernel edge tile touches one or two row blocks, so the idle-skip
+occupancy collapses to a thin band and ``pl.when`` skips almost every
+(row-block × edge-tile) round. The schedule is computed ONCE per
+(partition, batch) — the dataflow permutes the edge LIST, so gathered value
+streams arrive binned for free — and the same schedule serves every layer,
+every feature block, and the backward pass (the max/min tie-count scatter
+reuses it; cotangents to permuted inputs un-permute through the transpose of
+the ``take`` that applied the permutation). On the pallas backend the
+scheduled scatter additionally runs FUSED: mask and edge weights enter the
+kernel (dead-row convention + match-line scaling), so no ``values*weights``
+or mask-fill E×F stream is ever staged in HBM.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +87,22 @@ def _segment_reduce_xla(dst: jax.Array, values: jax.Array, n_rows: int, op: Op):
         # empty segments come back as INT32_MIN; the or-identity is 0
         return jnp.maximum(out, 0).astype(values.dtype)
     raise ValueError(op)
+
+
+def schedule_edges(dst: jax.Array, mask: Optional[jax.Array], n_rows: int, *,
+                   assume_sorted: bool = False):
+    """Destination-binned edge schedule (see ``kernels.gas_scatter.ops``).
+
+    Returns an ``EdgeSchedule`` — a stable counting-sort permutation of the
+    edges by ``dst // ROW_BLOCK`` plus the per-edge-tile live-block band the
+    idle-skip occupancy collapses to. Compute it once per (partition, batch)
+    and thread it through ``gas_scatter_weighted(schedule=...)`` with
+    edge arrays permuted by ``.perm``; ``assume_sorted=True`` skips the sort
+    for streams binned by construction (e.g. sampled-path seed rows).
+    """
+    from repro.kernels.gas_scatter import ops as gas_ops
+    return gas_ops.schedule_edges(dst, mask, n_rows,
+                                  assume_sorted=assume_sorted)
 
 
 def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
@@ -120,7 +150,10 @@ def _gather_pallas(n_rows: int):
     def bwd(res, g):
         ids, like = res
         gf = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
-        dtab = gas_scatter(ids.reshape(-1), gf, n_rows, op="add", impl="pallas")
+        # fused dispatch (mask/weights-free): out-of-range ids ride the
+        # dead-row convention inside the kernel wrapper, no E×F staging
+        dtab = _scatter_weighted_impl(ids.reshape(-1), gf, None, None,
+                                      n_rows, "add", "pallas")
         return dtab.astype(like.dtype), np.zeros(np.shape(ids), jax.dtypes.float0)
 
     gather.defvjp(fwd, bwd)
@@ -162,15 +195,31 @@ def gas_match(keys: jax.Array, queries: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _scatter_weighted_impl(dst, src_vals, weights, mask, n_rows, op: Op,
-                           impl: str):
+                           impl: str, schedule=None):
     """The primal computation shared by both backends (see the public
-    ``gas_scatter_weighted`` for semantics)."""
+    ``gas_scatter_weighted`` for semantics). ``schedule`` is the banded
+    idle-skip bounds for pre-permuted inputs (pallas backend only)."""
+    if impl == "pallas":
+        # fused dispatch: mask → dead-row convention, weights → match-line
+        # scaling, both INSIDE the kernel — no E×F staging array exists.
+        from repro.kernels.gas_scatter import ops as gas_ops
+        if op == "or":
+            # boolean-or ignores edge weights: scaling by a zero or negative
+            # weight before the max would silently flip set bits. The int
+            # round-trip matches the XLA oracle's truncation exactly, so
+            # both backends agree even on non-{0,1} values.
+            vals = src_vals.astype(jnp.int32).astype(jnp.float32)
+            out = gas_ops.gas_scatter_fused(dst, vals, None, mask, n_rows,
+                                            op="max", schedule=schedule)
+            return jnp.maximum(out, 0).astype(src_vals.dtype)
+        w = weights if op == "add" else None
+        return gas_ops.gas_scatter_fused(dst, src_vals, w, mask, n_rows,
+                                         op=op, schedule=schedule)
     if op in ("max", "min"):
         fill = jnp.asarray(_INIT[op], src_vals.dtype)
         vals = jnp.where(mask[:, None], src_vals, fill)
     elif op == "or":
-        # boolean-or ignores edge weights: scaling by a zero or negative
-        # weight before the segment-max would silently flip set bits
+        # boolean-or ignores edge weights (see the fused branch above)
         vals = jnp.where(mask[:, None], src_vals, 0)
     else:
         vals = src_vals * weights[:, None].astype(src_vals.dtype)
@@ -197,52 +246,59 @@ def _scatter_weighted_pallas(n_rows: int, op: Op):
                not consumed by the compare ops).
     Both the tie-count scatter and (via ``gas_gather(impl="pallas")`` at the
     dataflow layer) the feature-table scatter run through the FAST-GAS
-    kernel: the backward pass is itself GAS work. (``op="or"`` never reaches
-    here — it is flat, so the public entry stops gradients instead of
-    carrying residuals for an all-zero bwd.)
+    kernel: the backward pass is itself GAS work — and the tie-count scatter
+    reuses the SAME edge schedule as the forward (its dst stream IS the
+    forward's), so the idle-skip band serves the reverse pass too.
+    (``op="or"`` never reaches here — it is flat, so the public entry stops
+    gradients instead of carrying residuals for an all-zero bwd.)
     """
 
     @jax.custom_vjp
-    def scatter(dst, src_vals, weights, mask):
+    def scatter(dst, src_vals, weights, mask, schedule):
         return _scatter_weighted_impl(dst, src_vals, weights, mask,
-                                      n_rows, op, "pallas")
+                                      n_rows, op, "pallas", schedule)
 
-    def fwd(dst, src_vals, weights, mask):
+    def fwd(dst, src_vals, weights, mask, schedule):
         out = _scatter_weighted_impl(dst, src_vals, weights, mask,
-                                     n_rows, op, "pallas")
-        res = (dst, src_vals, weights, mask) + ((out,) if op in ("max", "min")
-                                                else ())
+                                     n_rows, op, "pallas", schedule)
+        res = (dst, src_vals, weights, mask, schedule) + (
+            (out,) if op in ("max", "min") else ())
         return out, res
 
     def bwd(res, g):
-        dst, src_vals, weights, mask = res[:4]
+        dst, src_vals, weights, mask, schedule = res[:5]
         d_dst = _zero_cotangent(dst)
         d_mask = _zero_cotangent(mask)
-        safe = jnp.clip(dst, 0, n_rows - 1)       # masked edges read junk rows
-        g_rows = jnp.take(g, safe, axis=0)        # …zeroed by the mask below
+        d_sched = jax.tree.map(_zero_cotangent, schedule)
+        # live = contributed to the forward: the fused kernel treats masked
+        # AND out-of-range edges as dead, so the cotangent must gate on both
+        # (mask alone would hand an out-of-range edge the clipped row's grad)
+        live = mask & (dst >= 0) & (dst < n_rows)
+        safe = jnp.clip(dst, 0, n_rows - 1)       # dead edges read junk rows
+        g_rows = jnp.take(g, safe, axis=0)        # …zeroed by `live` below
         if op == "add":
-            d_vals = jnp.where(mask[:, None],
+            d_vals = jnp.where(live[:, None],
                                g_rows * weights[:, None].astype(g.dtype),
                                0).astype(src_vals.dtype)
             d_w = jnp.where(
-                mask,
+                live,
                 (src_vals.astype(jnp.float32) * g_rows.astype(jnp.float32)
                  ).sum(-1),
                 0).astype(weights.dtype)
-            return d_dst, d_vals, d_w, d_mask
+            return d_dst, d_vals, d_w, d_mask, d_sched
 
-        out = res[4]
+        out = res[5]
         # CAM match lines as the grad router: an edge's value participates in
         # the row extremum iff it equals the saved output there (and is live)
-        eq = mask[:, None] & (src_vals == jnp.take(out, safe, axis=0))
+        eq = live[:, None] & (src_vals == jnp.take(out, safe, axis=0))
         # tie count via the kernel — the backward scatter is itself FAST-GAS
-        # work; masked/out-of-range edges ride the dead-row convention
-        ties = gas_scatter(jnp.where(mask, dst, n_rows),
-                           eq.astype(jnp.float32), n_rows + 1,
-                           op="add", impl="pallas")[:n_rows]
+        # work sharing the forward's dst stream, hence its schedule; masked/
+        # out-of-range edges ride the dead-row convention
+        ties = _scatter_weighted_impl(dst, eq.astype(jnp.float32), None, mask,
+                                      n_rows, "add", "pallas", schedule)
         share = g_rows / jnp.maximum(jnp.take(ties, safe, axis=0), 1.0)
         d_vals = jnp.where(eq, share, 0).astype(src_vals.dtype)
-        return d_dst, d_vals, _zero_cotangent(weights), d_mask
+        return d_dst, d_vals, _zero_cotangent(weights), d_mask, d_sched
 
     scatter.defvjp(fwd, bwd)
     return scatter
@@ -250,14 +306,20 @@ def _scatter_weighted_pallas(n_rows: int, op: Op):
 
 def gas_scatter_weighted(dst: jax.Array, src_vals: jax.Array, weights: jax.Array,
                          mask: jax.Array, n_rows: int, *, op: Op = "add",
-                         impl: str = "xla") -> jax.Array:
+                         impl: str = "xla", schedule=None) -> jax.Array:
     """Masked, edge-weighted scatter — the paper's aggregation atom.
 
     src_vals: (E, F); weights/mask: (E,). Invalid edges are routed to a
-    dead row (n_rows) and sliced off, keeping shapes static. Differentiable
+    dead row and sliced off, keeping shapes static. On the pallas backend
+    the dispatch is FUSED — mask and weights enter the kernel, no E×F
+    staging. ``schedule`` (an ``EdgeSchedule`` whose ``.perm`` order the
+    inputs are already in) swaps the dense grid for the banded walk, so
+    off-band rounds are never even visited. Differentiable
     on BOTH backends: the XLA oracle through native autodiff, the pallas
     kernel through the custom VJP above (pallas ≡ xla gradients is asserted
-    by ``tests/test_cgtrans_grad.py``).
+    by ``tests/test_cgtrans_grad.py``); the schedule is reused by the
+    backward (tie counts) and cotangents un-permute through the transpose
+    of the caller's ``take``.
     """
     if impl == "pallas":
         if op == "or":
@@ -266,6 +328,9 @@ def gas_scatter_weighted(dst: jax.Array, src_vals: jax.Array, weights: jax.Array
             # paying custom-VJP residuals for an all-zero backward
             return _scatter_weighted_impl(
                 dst, jax.lax.stop_gradient(src_vals),
-                jax.lax.stop_gradient(weights), mask, n_rows, op, impl)
-        return _scatter_weighted_pallas(n_rows, op)(dst, src_vals, weights, mask)
-    return _scatter_weighted_impl(dst, src_vals, weights, mask, n_rows, op, impl)
+                jax.lax.stop_gradient(weights), mask, n_rows, op, impl,
+                schedule)
+        return _scatter_weighted_pallas(n_rows, op)(dst, src_vals, weights,
+                                                    mask, schedule)
+    return _scatter_weighted_impl(dst, src_vals, weights, mask, n_rows, op,
+                                  impl, schedule)

@@ -37,6 +37,9 @@ class GCNConfig:
     impl: str = "xla"            # xla | pallas — GAS backend for aggregation
     request_chunk: Optional[int] = None  # SSD command-queue depth (seeds per
                                          # sampled-aggregation request burst)
+    scheduled: Optional[bool] = None     # destination-binned edge schedule
+                                         # (idle-skip locality pass); None →
+                                         # on exactly when impl="pallas"
 
 
 def gcn_schema(cfg: GCNConfig) -> Dict[str, Any]:
@@ -64,13 +67,33 @@ def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
     """feats: (P, part, F) owner-sharded. Returns (P, part, C) logits.
 
     ``impl`` overrides ``cfg.impl`` when given (the benchmarks sweep it).
+    The destination-binned edge schedule is computed ONCE here and reused by
+    every layer's aggregation (and, as a VJP residual, by the backward
+    pass) — the paper's idle-skip buffer content is per (partition, batch),
+    not per layer.
     """
+    impl_r = impl or cfg.impl
+    use_sched = (impl_r == "pallas") if cfg.scheduled is None else cfg.scheduled
+    sched, applied = None, False
+    # (the sharded baseline flow bins AFTER raw assembly in its own row
+    # space — a precomputed V-space schedule would be dead work there)
+    if use_sched and (cfg.dataflow == "cgtrans"
+                      or not cgtrans.is_sharded(mesh)):
+        sched = cgtrans.build_edge_schedule(
+            dst_global, mask, feats.shape[0] * feats.shape[1], mesh=mesh)
+        if cgtrans.is_sharded(mesh):
+            # pay the edge-list permutation once at partition time too —
+            # every layer then consumes the binned list directly
+            src_local, dst_global, weights, mask = cgtrans.apply_edge_schedule(
+                sched, src_local, dst_global, weights, mask)
+            applied = True
     h = feats
     for i in range(cfg.n_layers):
         agg = cgtrans.aggregate_edges(
             h, src_local, dst_global, weights, mask,
             mesh=mesh, dataflow=cfg.dataflow, op=cfg.aggregate,
-            impl=impl or cfg.impl)
+            impl=impl_r, scheduled=use_sched, schedule=sched,
+            schedule_applied=applied)
         if cfg.aggregate in ("max", "min"):
             # vertices with no in-edges hold the ±inf identity; mask before
             # the combine so neither the forward nor the cotangent meets inf
@@ -85,13 +108,14 @@ def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
 # ---------------------------------------------------------------------------
 
 def lookup_rows(feats, ids, *, mesh=None, dataflow="cgtrans", impl="xla",
-                request_chunk=None):
+                request_chunk=None, scheduled=None):
     """Distributed row lookup: ids (P, B_loc) → (P, B_loc, F)."""
     nbrs = ids[..., None]
     mask = jnp.ones_like(nbrs, dtype=bool)
     return cgtrans.aggregate_sampled(feats, nbrs, mask, mesh=mesh,
                                      dataflow=dataflow, impl=impl,
-                                     request_chunk=request_chunk)
+                                     request_chunk=request_chunk,
+                                     scheduled=scheduled)
 
 
 def sage_forward(params, feats, batch, cfg: GCNConfig, *,
@@ -115,10 +139,12 @@ def sage_forward(params, feats, batch, cfg: GCNConfig, *,
 
     # distributed step: fetch self features + aggregate 2-hop neighborhoods.
     x_self = lookup_rows(feats, flat1, mesh=mesh, dataflow=cfg.dataflow,
-                         impl=cfg.impl, request_chunk=cfg.request_chunk)
+                         impl=cfg.impl, request_chunk=cfg.request_chunk,
+                         scheduled=cfg.scheduled)
     x_agg = cgtrans.aggregate_sampled(
         feats, batch["nbrs2"], batch["mask2"], mesh=mesh,
-        dataflow=cfg.dataflow, impl=cfg.impl, request_chunk=cfg.request_chunk)
+        dataflow=cfg.dataflow, impl=cfg.impl, request_chunk=cfg.request_chunk,
+        scheduled=cfg.scheduled)
 
     h1 = jnp.concatenate([x_self, x_agg], axis=-1)
     h1 = jax.nn.relu(jnp.einsum("pbf,fh->pbh", h1, params["w0"]) + params["b0"])

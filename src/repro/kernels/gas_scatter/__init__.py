@@ -1,5 +1,12 @@
 from repro.kernels.gas_scatter import ops, ref
-from repro.kernels.gas_scatter.ops import gas_scatter, occupancy_map
-from repro.kernels.gas_scatter.ref import gas_scatter_ref
+from repro.kernels.gas_scatter.ops import (EdgeSchedule, dense_skip_stats,
+                                           gas_scatter, gas_scatter_fused,
+                                           occupancy_map, schedule_edges,
+                                           schedule_skip_stats)
+from repro.kernels.gas_scatter.ref import (gas_scatter_ref,
+                                           gas_scatter_weighted_ref)
 
-__all__ = ["ops", "ref", "gas_scatter", "occupancy_map", "gas_scatter_ref"]
+__all__ = ["EdgeSchedule", "dense_skip_stats", "ops", "ref", "gas_scatter",
+           "gas_scatter_fused",
+           "gas_scatter_ref", "gas_scatter_weighted_ref", "occupancy_map",
+           "schedule_edges", "schedule_skip_stats"]

@@ -9,10 +9,16 @@ skips rounds with no match. TPU re-expression (DESIGN §2):
   * the CAM match is an equality compare of the edge tile's dst ids against
     the row block's iota — producing the match-line matrix;
   * for sum-aggregation the match matrix is contracted with the value tile on
-    the MXU (one-hot matmul): irregular scatter → dense matmul;
+    the MXU (one-hot matmul): irregular scatter → dense matmul. Edge weights
+    fuse here for free: scaling the match lines by ``w`` BEFORE the
+    contraction makes the same matmul compute the weighted scatter, so no
+    ``values * weights`` edge-stream is ever materialized in HBM;
   * idle-skip is a per-(row-block × edge-tile) occupancy bitmap computed on
     the host side of the op; ``pl.when`` skips the whole round — compute AND
-    the value-tile traffic — exactly the paper's clock-gating.
+    the value-tile traffic — exactly the paper's clock-gating. The skip only
+    pays off when edges arrive destination-binned (``ops.schedule_edges``):
+    binned tiles touch one or two row blocks, so the bitmap is a thin band
+    instead of dense.
 
 Grid: (row_blocks, feat_blocks, edge_tiles); edge innermost so the output
 block is revisited (stays resident in VMEM while edges stream through).
@@ -25,13 +31,47 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-# hardware-aligned tiles: rows/features on 128 (MXU dim), edges per round on
-# 128 for the add path (matmul) and 32 for the compare-reduce max/min path.
+# hardware-aligned tiles: rows/features on 128 (MXU dim). Edges per round are
+# 128 on every path now — the compare path used to cap at 32 because it
+# materialized a full (R, E, F) select intermediate; it accumulates in
+# CMP_CHUNK-wide slabs instead, so its VMEM peak is (R, CMP_CHUNK, F)
+# regardless of the edge tile. EDGE_TILE_INTERPRET is the interpret-mode
+# (CPU differential/benchmark tier) width — kept at the hardware value by
+# default (a knob for tiling studies, not a divergence); note that on a
+# binned stream the live rounds are ≤ T + row_blocks − 1 regardless of tile
+# width (the staircase argument), so the scheduled walk's round count is
+# tile-size-robust.
 ROW_BLOCK = 128
 FEAT_BLOCK = 128
-EDGE_TILE_ADD = 128
-EDGE_TILE_CMP = 32
+EDGE_TILE = 128
+EDGE_TILE_ADD = EDGE_TILE
+EDGE_TILE_CMP = EDGE_TILE
+EDGE_TILE_INTERPRET = 128
+CMP_CHUNK = 32
+
+
+def edge_tile(op: str, interpret: bool) -> int:
+    """The edge-tile width a dispatch will use — schedules must be built
+    with the same width (``ops.schedule_edges`` resolves it identically)."""
+    if interpret:
+        return EDGE_TILE_INTERPRET
+    return EDGE_TILE_ADD if op == "add" else EDGE_TILE_CMP
+
+
+def _add_round(rel, val_ref, out_ref, w=None):
+    """One scatter-add round shared by all four add kernels: CAM match
+    lines from the relative dst ids, optionally scaled by the edge weights
+    (the fused form of ``values * weights[:, None]`` followed by the
+    unweighted scatter), contracted with the value tile on the MXU."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (ROW_BLOCK, rel.shape[0]), 0)
+    match = (rows == rel[None, :]).astype(val_ref.dtype)   # CAM match lines
+    if w is not None:
+        match = match * w[None, :].astype(val_ref.dtype)
+    # row-parallel update: one-hot contraction on the MXU
+    out_ref[...] += jax.lax.dot(
+        match, val_ref[...], preferred_element_type=out_ref.dtype)
 
 
 def _gas_add_kernel(occ_ref, dst_ref, val_ref, out_ref):
@@ -43,15 +83,44 @@ def _gas_add_kernel(occ_ref, dst_ref, val_ref, out_ref):
 
     @pl.when(occ_ref[0, 0] > 0)          # idle-skip: no CAM match → no round
     def _round():
-        rel = dst_ref[...] - r * ROW_BLOCK               # (E,)
-        rows = jax.lax.broadcasted_iota(jnp.int32, (ROW_BLOCK, rel.shape[0]), 0)
-        match = (rows == rel[None, :]).astype(val_ref.dtype)   # CAM match lines
-        # row-parallel update: one-hot contraction on the MXU
-        out_ref[...] += jax.lax.dot(
-            match, val_ref[...], preferred_element_type=out_ref.dtype)
+        _add_round(dst_ref[...] - r * ROW_BLOCK, val_ref, out_ref)
 
 
-def _gas_cmp_kernel(occ_ref, dst_ref, val_ref, out_ref, *, op: str):
+def _gas_addw_kernel(occ_ref, dst_ref, w_ref, val_ref, out_ref):
+    r, e = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(occ_ref[0, 0] > 0)
+    def _round():
+        _add_round(dst_ref[...] - r * ROW_BLOCK, val_ref, out_ref,
+                   w=w_ref[...])
+
+
+def _cmp_round(rel, val, acc, *, op: str, chunk: int):
+    """Select-on-match ACCUMULATION shared by both cmp kernels: the edge
+    tile streams through ``chunk``-wide slabs, each slab's (R, chunk, F)
+    select reduced into the running (R, F) extremum before the next slab
+    loads — the full (R, E, F) ``contrib`` intermediate of the old kernel
+    never exists, which is what lets the cmp edge tile sit at 128 (VMEM
+    peak is (R, chunk, F) regardless of tile width). Interpret mode uses a
+    single full-width slab: no VMEM to respect, fewer emulated ops."""
+    init = -jnp.inf if op == "max" else jnp.inf
+    rows = jax.lax.broadcasted_iota(jnp.int32, (ROW_BLOCK, chunk), 0)
+    for c in range(rel.shape[0] // chunk):
+        sl = slice(c * chunk, (c + 1) * chunk)
+        match = rows == rel[sl][None, :]                  # (R, C) match lines
+        contrib = jnp.where(match[..., None], val[sl][None, :, :], init)
+        red = (jnp.max(contrib, axis=1) if op == "max"
+               else jnp.min(contrib, axis=1))
+        acc = jnp.maximum(acc, red) if op == "max" else jnp.minimum(acc, red)
+    return acc
+
+
+def _gas_cmp_kernel(occ_ref, dst_ref, val_ref, out_ref, *, op: str,
+                    chunk: int):
     r, e = pl.program_id(0), pl.program_id(2)
     init = -jnp.inf if op == "max" else jnp.inf
 
@@ -61,37 +130,158 @@ def _gas_cmp_kernel(occ_ref, dst_ref, val_ref, out_ref, *, op: str):
 
     @pl.when(occ_ref[0, 0] > 0)
     def _round():
-        rel = dst_ref[...] - r * ROW_BLOCK
-        rows = jax.lax.broadcasted_iota(jnp.int32, (ROW_BLOCK, rel.shape[0]), 0)
-        match = rows == rel[None, :]                      # (R, E) bool
-        contrib = jnp.where(match[..., None], val_ref[...][None, :, :], init)
-        red = jnp.max(contrib, axis=1) if op == "max" else jnp.min(contrib, axis=1)
-        cur = out_ref[...]
-        out_ref[...] = jnp.maximum(cur, red) if op == "max" else jnp.minimum(cur, red)
+        rel = dst_ref[...] - r * ROW_BLOCK                # (E,)
+        out_ref[...] = _cmp_round(rel, val_ref[...], out_ref[...],
+                                  op=op, chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# the banded (scheduled) walk: grid = each row block's own tile range
+# ---------------------------------------------------------------------------
+#
+# With a destination-binned edge stream the live (row-block × edge-tile)
+# pairs form a staircase of ≤ T + R - 1 cells. Instead of scanning the full
+# R×T grid and ``pl.when``-skipping the idle cells (each skipped cell still
+# pays a grid-step round), the scheduled dispatch walks ONLY the live band:
+# a scalar-prefetch work list (W, 4) of [row_block, tile, live, init] rows
+# drives data-dependent BlockSpec index maps — the paper's idle-skip buffer
+# consumed as a work queue rather than a gate. Work items are ordered by
+# row block, so the output block's revisits stay consecutive (the TPU
+# revisiting contract); ``init`` marks the first visit of each row block
+# (empty blocks get one init-only step so every output row is defined).
+
+def _sched_add_kernel(wk_ref, dst_ref, val_ref, out_ref):
+    w = pl.program_id(1)
+
+    @pl.when(wk_ref[w, 3] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(wk_ref[w, 2] == 1)
+    def _round():
+        _add_round(dst_ref[...] - wk_ref[w, 0] * ROW_BLOCK, val_ref, out_ref)
+
+
+def _sched_addw_kernel(wk_ref, dst_ref, w_ref, val_ref, out_ref):
+    w = pl.program_id(1)
+
+    @pl.when(wk_ref[w, 3] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(wk_ref[w, 2] == 1)
+    def _round():
+        _add_round(dst_ref[...] - wk_ref[w, 0] * ROW_BLOCK, val_ref, out_ref,
+                   w=w_ref[...])
+
+
+def _sched_cmp_kernel(wk_ref, dst_ref, val_ref, out_ref, *, op: str,
+                      chunk: int):
+    w = pl.program_id(1)
+    init = -jnp.inf if op == "max" else jnp.inf
+
+    @pl.when(wk_ref[w, 3] == 1)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, init)
+
+    @pl.when(wk_ref[w, 2] == 1)
+    def _round():
+        rel = dst_ref[...] - wk_ref[w, 0] * ROW_BLOCK
+        out_ref[...] = _cmp_round(rel, val_ref[...], out_ref[...],
+                                  op=op, chunk=chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "op", "interpret"))
+def gas_scatter_banded(work: jax.Array, dst: jax.Array, values: jax.Array,
+                       n_rows: int, *, op: str = "add",
+                       weights: jax.Array | None = None,
+                       interpret: bool = False) -> jax.Array:
+    """Scheduled FAST-GAS dispatch: the grid walks the live band only.
+
+    work: (W, 4) int32 scalar-prefetch rows [row_block, tile, live, init],
+    ordered by row_block (see ``ops.schedule_edges``); dst/values/weights as
+    in ``gas_scatter_pallas`` and already destination-binned.
+    """
+    E, F = values.shape
+    et = edge_tile(op, interpret)
+    fb = F if interpret else FEAT_BLOCK
+    assert E % et == 0 and F % fb == 0 and n_rows % ROW_BLOCK == 0
+    grid = (F // fb, work.shape[0])
+
+    in_specs = [pl.BlockSpec((et,), lambda f, w, wk: (wk[w, 1],))]   # dst
+    operands = [dst]
+    if op == "add":
+        if weights is None:
+            kernel = _sched_add_kernel
+        else:
+            kernel = _sched_addw_kernel
+            in_specs.append(pl.BlockSpec((et,), lambda f, w, wk: (wk[w, 1],)))
+            operands.append(weights)
+    else:
+        assert weights is None, "compare ops do not consume edge weights"
+        kernel = functools.partial(_sched_cmp_kernel, op=op,
+                                   chunk=et if interpret else CMP_CHUNK)
+    in_specs.append(pl.BlockSpec((et, fb), lambda f, w, wk: (wk[w, 1], f)))
+    operands.append(values)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((ROW_BLOCK, fb), lambda f, w, wk: (wk[w, 0], f)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, F), values.dtype),
+        interpret=interpret,
+    )(work, *operands)
 
 
 @functools.partial(jax.jit, static_argnames=("n_rows", "op", "interpret"))
 def gas_scatter_pallas(dst: jax.Array, values: jax.Array, occupancy: jax.Array,
                        n_rows: int, *, op: str = "add",
+                       weights: jax.Array | None = None,
                        interpret: bool = False) -> jax.Array:
     """dst: (E,) int32 (pre-padded to tile multiple, dead rows ≥ n_rows_padded);
-    values: (E, F) f32 (pre-padded); occupancy: (row_blocks, edge_tiles) int32.
+    values: (E, F) f32 (pre-padded); occupancy: (row_blocks, edge_tiles) int32;
+    weights: optional (E,) edge weights fused into the add path's match lines
+    (compare ops never consume weights — pass None).
     n_rows must be a multiple of ROW_BLOCK; F a multiple of FEAT_BLOCK."""
     E, F = values.shape
-    et = EDGE_TILE_ADD if op == "add" else EDGE_TILE_CMP
-    assert E % et == 0 and F % FEAT_BLOCK == 0 and n_rows % ROW_BLOCK == 0
-    grid = (n_rows // ROW_BLOCK, F // FEAT_BLOCK, E // et)
+    et = edge_tile(op, interpret)
+    # feature block: the 128-lane MXU tile on hardware; in interpret mode
+    # (CPU differential tier) there is no lane constraint, so one block spans
+    # the whole (8-aligned) width — lane-padding a narrow F to 128 would
+    # multiply every round's slice/accumulate traffic by 128/F for nothing.
+    fb = F if interpret else FEAT_BLOCK
+    assert E % et == 0 and F % fb == 0 and n_rows % ROW_BLOCK == 0
+    grid = (n_rows // ROW_BLOCK, F // fb, E // et)
 
-    kernel = _gas_add_kernel if op == "add" else functools.partial(_gas_cmp_kernel, op=op)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda r, f, e: (r, e)),            # occupancy
+        pl.BlockSpec((et,), lambda r, f, e: (e,)),               # dst ids
+    ]
+    operands = [occupancy, dst]
+    if op == "add":
+        if weights is None:
+            kernel = _gas_add_kernel
+        else:
+            kernel = _gas_addw_kernel
+            in_specs.append(pl.BlockSpec((et,), lambda r, f, e: (e,)))  # w
+            operands.append(weights)
+    else:
+        assert weights is None, "compare ops do not consume edge weights"
+        kernel = functools.partial(_gas_cmp_kernel, op=op,
+                                   chunk=et if interpret else CMP_CHUNK)
+    in_specs.append(pl.BlockSpec((et, fb), lambda r, f, e: (e, f)))
+    operands.append(values)
+
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda r, f, e: (r, e)),            # occupancy
-            pl.BlockSpec((et,), lambda r, f, e: (e,)),               # dst ids
-            pl.BlockSpec((et, FEAT_BLOCK), lambda r, f, e: (e, f)),  # values
-        ],
-        out_specs=pl.BlockSpec((ROW_BLOCK, FEAT_BLOCK), lambda r, f, e: (r, f)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((ROW_BLOCK, fb), lambda r, f, e: (r, f)),
         out_shape=jax.ShapeDtypeStruct((n_rows, F), values.dtype),
         interpret=interpret,
-    )(occupancy, dst, values)
+    )(*operands)

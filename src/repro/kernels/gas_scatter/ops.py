@@ -1,12 +1,25 @@
-"""jit'd public wrapper for the FAST-GAS scatter kernel.
+"""jit'd public wrappers for the FAST-GAS scatter kernel.
 
-Handles padding to hardware tiles, builds the idle-skip occupancy bitmap, and
-dispatches: Pallas (TPU, or interpret-mode on CPU) vs the jnp reference.
+Three layers:
+
+* ``schedule_edges`` — the locality pass (paper Fig 11(c)): a stable
+  counting-sort of the edge stream by destination row block. Binned edges
+  make each edge tile touch only one or two row blocks, so the idle-skip
+  occupancy map collapses from an arbitrary bitmap to a thin band described
+  by per-tile (min, max) block bounds — and ``pl.when`` actually skips.
+* ``occupancy_map`` — the unscheduled fallback's exact bitmap, computed by a
+  bincount over (block, tile) pairs: O(E + R·T), replacing the old
+  O(R·T·edge_tile) broadcast-compare that was re-traced per shard.
+* ``gas_scatter`` / ``gas_scatter_fused`` — padding + dispatch. The fused
+  entry takes mask and edge weights INTO the kernel (mask via the dead-row
+  convention, weights via match-line scaling), so no ``values * weights`` or
+  mask-fill edge stream is ever staged as a full E×F array in HBM.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,19 +38,186 @@ def _pad_to(x: jax.Array, mult: int, axis: int, fill):
     return jnp.pad(x, widths, constant_values=fill)
 
 
+def _feat_mult(interpret: bool) -> int:
+    """Feature-axis padding granule: 128 lanes on hardware; 8 in interpret
+    mode, where the kernel runs a single full-width feature block and
+    lane-padding a narrow F to 128 would inflate every round's traffic."""
+    return 8 if interpret else K.FEAT_BLOCK
+
+
+# ---------------------------------------------------------------------------
+# the edge schedule: destination-binned order + banded idle-skip bounds
+# ---------------------------------------------------------------------------
+
+class EdgeSchedule(NamedTuple):
+    """Destination-binned edge schedule for one (partition, batch).
+
+    ``perm`` reorders the edge stream so destinations ascend by row block
+    (stable within a block, so intra-block edge order is preserved); dead
+    edges (masked / out-of-range) sort to the end. ``blk_min``/``blk_max``
+    are the per-edge-tile live row-block bounds of the PERMUTED, tile-padded
+    stream — the banded form of the idle-skip buffer: tile ``t`` can only
+    match row blocks in ``[blk_min[t], blk_max[t]]`` (``blk_max < blk_min``
+    marks an all-dead tile). ``work`` is those bounds compiled into the
+    kernel's walk order — (W, 4) rows of [row_block, tile, live, init],
+    W = T + 2·row_blocks statically, covering every live (row-block, tile)
+    pair exactly once plus one init-only row per empty block — so the
+    scheduled grid iterates each row block's own tile range instead of
+    R×T. Computed once per (partition, batch) and reused across layers,
+    feature blocks, and the backward pass.
+    """
+    perm: jax.Array      # (E,) int32
+    blk_min: jax.Array   # (T,) int32; T = tile-padded E // EDGE_TILE
+    blk_max: jax.Array   # (T,) int32; -1 on all-dead tiles
+    work: jax.Array      # (W, 4) int32 [row_block, tile, live, init]
+
+
+def _edge_bins(dst: jax.Array, mask: Optional[jax.Array], n_rows: int):
+    """Row-block bin per edge; dead edges get the one-past-the-end bin."""
+    n_blocks = -(-n_rows // K.ROW_BLOCK)
+    ok = (dst >= 0) & (dst < n_rows)
+    if mask is not None:
+        ok = ok & mask
+    bins = jnp.where(ok, dst // K.ROW_BLOCK, n_blocks)
+    return bins.astype(jnp.int32), n_blocks
+
+
+def _tile_bounds(bins: jax.Array, n_blocks: int, edge_tile: int):
+    """Per-tile (min, max) live block of a (padded) bin stream."""
+    t = _pad_to(bins, edge_tile, 0, n_blocks).reshape(-1, edge_tile)
+    live = t < n_blocks
+    blk_min = jnp.min(jnp.where(live, t, n_blocks), axis=1).astype(jnp.int32)
+    blk_max = jnp.max(jnp.where(live, t, -1), axis=1).astype(jnp.int32)
+    return blk_min, blk_max
+
+
+def _work_list(blk_min: jax.Array, blk_max: jax.Array,
+               n_blocks: int) -> jax.Array:
+    """Compile per-tile band bounds into the banded kernel's walk order.
+
+    Returns (W, 4) int32 rows [row_block, tile, live, init] ordered by row
+    block (output revisits stay consecutive), where each row block's run is
+    its own contiguous tile range. W = T + 2·n_blocks is a static bound: on
+    a binned stream the live pairs form a staircase (Σ spans ≤ T + n_blocks
+    − 1) and each empty row block adds one init-only row. Trailing rows are
+    dead filler pinned to the last block.
+    """
+    T = blk_min.shape[0]
+    W = T + 2 * n_blocks
+    dead = blk_max < 0
+    # monotone envelopes: interior all-dead tiles (possible on
+    # assume_sorted streams with interleaved masks) inherit neighbor
+    # bounds, restoring the ascending order searchsorted needs — visiting
+    # such a tile is a zero-match no-op, never a miss
+    hi_env = jax.lax.cummax(jnp.where(dead, -1, blk_max))
+    lo_env = jax.lax.cummin(
+        jnp.where(dead, n_blocks, blk_min)[::-1])[::-1]
+    r = jnp.arange(n_blocks, dtype=jnp.int32)
+    t_lo = jnp.searchsorted(hi_env, r, side="left")      # first tile ∋ r
+    t_hi = jnp.maximum(jnp.searchsorted(lo_env, r, side="right"), t_lo)
+    cnt = jnp.maximum(t_hi - t_lo, 1)                    # empty block: init
+    offs = jnp.concatenate([jnp.zeros((1,), cnt.dtype), jnp.cumsum(cnt)])
+    w = jnp.arange(W)
+    rb = jnp.searchsorted(offs[1:], w, side="right")     # block of step w
+    rb_c = jnp.minimum(rb, n_blocks - 1)
+    j = w - offs[rb_c]
+    tile = jnp.clip(t_lo[rb_c] + j, 0, T - 1)
+    live = (rb < n_blocks) & (j < (t_hi - t_lo)[rb_c])
+    init = (rb < n_blocks) & (j == 0)
+    return jnp.stack(
+        [rb_c, tile, live.astype(jnp.int32), init.astype(jnp.int32)],
+        axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_rows", "edge_tile", "assume_sorted"))
+def schedule_edges(dst: jax.Array, mask: Optional[jax.Array], n_rows: int, *,
+                   edge_tile: Optional[int] = None,
+                   assume_sorted: bool = False) -> EdgeSchedule:
+    """Bin the edge stream by destination row block (stable counting sort).
+
+    ``dst``: (E,) destination rows in ``[0, n_rows)``; entries that are
+    masked or out of range are treated as dead and sort last. The sort key
+    is ``dst // ROW_BLOCK`` only, so edges of one block keep their relative
+    order (the gather stream stays as sequential as the input allows).
+
+    ``assume_sorted=True`` skips the sort (``perm`` is the identity) and
+    only derives the banded bounds — for streams that are binned by
+    construction, e.g. the sampled path's ``repeat(arange(R), K)`` seeds.
+
+    ``edge_tile`` defaults to the width the kernel dispatch on this backend
+    will use (``kernel.edge_tile``) — pass it explicitly only to study
+    other tilings.
+    """
+    if edge_tile is None:
+        interp = jax.default_backend() != "tpu"
+        edge_tile = K.edge_tile("add", interp)
+        # the schedule is op-independent, so its default width is only safe
+        # while every op dispatches the same tile; fail loudly if the cmp
+        # width is ever re-split from the add width (it was 32 before)
+        assert edge_tile == K.edge_tile("max", interp), (
+            "add/cmp edge tiles diverged — schedule_edges needs an explicit "
+            "edge_tile per op")
+    bins, n_blocks = _edge_bins(dst, mask, n_rows)
+    iota = jnp.arange(dst.shape[0], dtype=jnp.int32)
+    if assume_sorted:
+        sorted_bins, perm = bins, iota
+    else:
+        sorted_bins, perm = jax.lax.sort((bins, iota), num_keys=1,
+                                         is_stable=True)
+    blk_min, blk_max = _tile_bounds(sorted_bins, n_blocks, edge_tile)
+    return EdgeSchedule(perm, blk_min, blk_max,
+                        _work_list(blk_min, blk_max, n_blocks))
+
+
+def schedule_skip_stats(sched: EdgeSchedule):
+    """(live_rounds, total_rounds) of a schedule — how many (row-block ×
+    edge-tile) rounds the banded walk executes vs the dense R×T grid. The
+    difference is the idle-skip win (paper Fig 11(c)), measurable without
+    running the kernel."""
+    n_blocks = int(sched.work[:, 0].max()) + 1
+    total = n_blocks * sched.blk_min.shape[0]
+    return int(sched.work[:, 2].sum()), total
+
+
+def dense_skip_stats(dst: jax.Array, mask: Optional[jax.Array],
+                     n_rows: int):
+    """(live_rounds, total_rounds) of the UNSCHEDULED dense grid for the
+    same edge stream — the dead-row routing and tile padding reproduce
+    exactly what ``gas_scatter_fused`` dispatches without a schedule, so
+    benchmarks and tests count the grid the kernel actually runs."""
+    et = K.edge_tile("add", jax.default_backend() != "tpu")
+    R = ((n_rows + K.ROW_BLOCK - 1) // K.ROW_BLOCK) * K.ROW_BLOCK
+    ok = (dst >= 0) & (dst < n_rows)
+    if mask is not None:
+        ok = ok & mask
+    dstp = _pad_to(jnp.where(ok, dst, R), et, 0, R)
+    occ = occupancy_map(dstp, R // K.ROW_BLOCK, et)
+    return int(occ.sum()), int(occ.size)
+
+
 def occupancy_map(dst: jax.Array, n_row_blocks: int, edge_tile: int) -> jax.Array:
     """(row_blocks, edge_tiles) int32: does edge tile e touch row block r?
 
-    This is the idle-skip buffer content (paper Fig 11(c)) — computed once
-    per (graph partition, batch) and reused across feature blocks.
+    This is the idle-skip buffer content (paper Fig 11(c)) for an UNBINNED
+    edge stream — computed once per (graph partition, batch) and reused
+    across feature blocks. One bincount over (block, tile) pairs:
+    O(E + R·T), never the O(R·T·edge_tile) dense compare.
     """
     E = dst.shape[0]
-    tiles = dst.reshape(E // edge_tile, edge_tile)
-    blk = tiles // K.ROW_BLOCK                                  # (T, et)
-    r = jnp.arange(n_row_blocks, dtype=jnp.int32)
-    hit = (blk[None, :, :] == r[:, None, None]).any(-1)         # (R, T)
-    return hit.astype(jnp.int32)
+    T = E // edge_tile
+    blk = dst // K.ROW_BLOCK
+    dead = (blk < 0) | (blk >= n_row_blocks)
+    idx = jnp.where(dead, n_row_blocks, blk)                 # overflow bin
+    flat = idx * T + jnp.arange(E, dtype=dst.dtype) // edge_tile
+    counts = jnp.zeros(((n_row_blocks + 1) * T,), jnp.int32).at[flat].add(1)
+    return (counts[: n_row_blocks * T].reshape(n_row_blocks, T) > 0
+            ).astype(jnp.int32)
 
+
+# ---------------------------------------------------------------------------
+# dispatch wrappers
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("n_rows", "op", "interpret"))
 def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
@@ -62,7 +242,7 @@ def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
                            interpret=interpret)[:, 0]
 
     E, F = values.shape
-    et = K.EDGE_TILE_ADD if op == "add" else K.EDGE_TILE_CMP
+    et = K.edge_tile(op, interpret)
     R = ((n_rows + K.ROW_BLOCK - 1) // K.ROW_BLOCK) * K.ROW_BLOCK
 
     # dead-row padding: invalid/padded edges target row R (outside all blocks)
@@ -72,11 +252,76 @@ def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
     fill = {"add": 0.0, "max": -jnp.inf, "min": jnp.inf}[op]
     valp = jnp.where(ok[:, None], values, fill)
     valp = _pad_to(valp, et, 0, fill)
-    valp = _pad_to(valp, K.FEAT_BLOCK, 1, fill)
+    valp = _pad_to(valp, _feat_mult(interpret), 1, fill)
 
     occ = occupancy_map(dstp, R // K.ROW_BLOCK, et)
     out = K.gas_scatter_pallas(dstp, valp, occ, R, op=op, interpret=interpret)
     return out[:n_rows, :F]
 
 
-__all__ = ["gas_scatter", "gas_scatter_ref", "occupancy_map"]
+@functools.partial(jax.jit, static_argnames=("n_rows", "op", "interpret"))
+def gas_scatter_fused(dst: jax.Array, values: jax.Array,
+                      weights: Optional[jax.Array], mask: Optional[jax.Array],
+                      n_rows: int, *, op: str = "add", schedule=None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Masked, weighted scatter-reduce in ONE kernel dispatch.
+
+    The paper's aggregation atom without the XLA staging: the mask folds
+    into the dead-row convention (a masked edge's dst becomes the padded
+    row block past the end, so its CAM match lines are all zero — its value
+    is never filled, only never matched), and for ``op="add"`` the weights
+    ride into the kernel and scale the match lines before the MXU
+    contraction. Compare ops ignore ``weights`` (pass None). ``values`` at
+    masked positions must be finite (they are zero-matched, not replaced —
+    a NaN times a zero match line would still poison a sum).
+
+    ``schedule``: an ``EdgeSchedule`` — its ``work`` list swaps the dense
+    R×T grid for the banded walk (each row block iterates only its own tile
+    range; idle rounds are never even visited). The CALLER guarantees
+    ``dst``/``values``/``weights``/``mask`` are already in ``schedule.perm``
+    order — this wrapper never permutes (the dataflow permutes the edge
+    LIST once, so gathered values arrive binned for free).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    assert op in ("add", "max", "min"), op
+    if values.ndim == 1:
+        return gas_scatter_fused(dst, values[:, None], weights, mask, n_rows,
+                                 op=op, schedule=schedule,
+                                 interpret=interpret)[:, 0]
+
+    E, F = values.shape
+    et = K.edge_tile(op, interpret)
+    R = ((n_rows + K.ROW_BLOCK - 1) // K.ROW_BLOCK) * K.ROW_BLOCK
+
+    ok = (dst >= 0) & (dst < n_rows)
+    if mask is not None:
+        ok = ok & mask
+    dstp = _pad_to(jnp.where(ok, dst, R), et, 0, R)
+    valp = _pad_to(_pad_to(values, et, 0, 0), _feat_mult(interpret), 1, 0)
+    wp = None
+    if op == "add" and weights is not None:
+        wp = _pad_to(weights, et, 0, 0)
+
+    n_blocks = R // K.ROW_BLOCK
+    if schedule is None:
+        occ = occupancy_map(dstp, n_blocks, et)
+        out = K.gas_scatter_pallas(dstp, valp, occ, R, op=op, weights=wp,
+                                   interpret=interpret)
+    else:
+        T = dstp.shape[0] // et
+        assert schedule.blk_min.shape[0] == T, (
+            f"schedule has {schedule.blk_min.shape[0]} tile bounds but the "
+            f"padded edge stream has {T} tiles — was the schedule built for "
+            f"a different edge count or tile size?")
+        assert schedule.work.shape[0] == T + 2 * n_blocks, (
+            f"schedule work list sized for a different row space: "
+            f"{schedule.work.shape[0]} != {T} + 2·{n_blocks}")
+        out = K.gas_scatter_banded(schedule.work, dstp, valp, R, op=op,
+                                   weights=wp, interpret=interpret)
+    return out[:n_rows, :F]
+
+
+__all__ = ["EdgeSchedule", "dense_skip_stats", "gas_scatter",
+           "gas_scatter_fused", "gas_scatter_ref", "occupancy_map",
+           "schedule_edges", "schedule_skip_stats"]

@@ -1,6 +1,8 @@
-"""Pure-jnp oracle for the FAST-GAS scatter kernel."""
+"""Pure-jnp oracles for the FAST-GAS scatter kernel."""
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,3 +27,20 @@ def gas_scatter_ref(dst: jax.Array, values: jax.Array, n_rows: int, *,
         vals = jnp.where(ok[:, None], values, jnp.inf)
         return jax.ops.segment_min(vals, safe, num_segments=n_rows + 1)[:n_rows]
     raise ValueError(op)
+
+
+def gas_scatter_weighted_ref(dst: jax.Array, values: jax.Array,
+                             weights: Optional[jax.Array],
+                             mask: Optional[jax.Array], n_rows: int, *,
+                             op: str = "add") -> jax.Array:
+    """Oracle for ``ops.gas_scatter_fused``: masked, weighted scatter-reduce.
+
+    Weights scale contributions only under ``op="add"`` (compare ops take
+    the raw value); masked edges contribute nothing on any op.
+    """
+    ok = (dst >= 0) & (dst < n_rows)
+    if mask is not None:
+        ok = ok & mask
+    if op == "add" and weights is not None:
+        values = values * weights[:, None].astype(values.dtype)
+    return gas_scatter_ref(jnp.where(ok, dst, n_rows), values, n_rows, op=op)

@@ -14,12 +14,16 @@ Two entry points:
 
 * ``make_sage_train_step`` — the paper's workload as a jit-able pipeline
   stage: GraphSAGE + CGTrans loss/grad/AdamW against an owner-sharded
-  feature table. This is where the two FAST-GAS deployment knobs surface
-  into training: ``cfg.impl`` (GAS backend for every per-shard aggregation)
-  and ``cfg.request_chunk`` (SSD command-queue depth for the sampled
-  request stream) ride in on the ``GCNConfig`` — both callers
-  (``examples/train_graphsage.py``, the distributed test cases) build their
-  step through here instead of hand-rolling the grad/update composition.
+  feature table. This is where the FAST-GAS deployment knobs surface into
+  training: ``cfg.impl`` (GAS backend for every per-shard aggregation),
+  ``cfg.request_chunk`` (SSD command-queue depth for the sampled request
+  stream) and ``cfg.scheduled`` (the destination-binned locality pass that
+  turns the kernel's idle-skip occupancy into a thin band; defaults on
+  exactly when ``impl="pallas"``) ride in on the ``GCNConfig`` — all
+  callers (``examples/train_graphsage.py``, the distributed test cases)
+  build their step through here instead of hand-rolling the grad/update
+  composition. The schedule serves forward AND backward: it is carried as a
+  custom-VJP residual, so the reverse pass skips the same idle tiles.
 """
 
 from __future__ import annotations
@@ -40,10 +44,10 @@ def make_sage_train_step(cfg, tc: TrainConfig, *, feats,
                          mesh: Optional[Mesh] = None) -> Callable:
     """(state, batch) → (state, metrics) for GraphSAGE + CGTrans training.
 
-    ``cfg`` is a ``repro.core.gcn.GCNConfig`` — its ``dataflow``, ``impl``
-    and ``request_chunk`` fields select the transmission dataflow, the GAS
-    backend and the request-stream chunking for every aggregation in the
-    step. ``feats`` is the owner-sharded (P, part, F) feature table (the
+    ``cfg`` is a ``repro.core.gcn.GCNConfig`` — its ``dataflow``, ``impl``,
+    ``request_chunk`` and ``scheduled`` fields select the transmission
+    dataflow, the GAS backend, the request-stream chunking and the
+    idle-skip locality scheduling for every aggregation in the step. ``feats`` is the owner-sharded (P, part, F) feature table (the
     storage tier); ``state`` is ``{"params", "opt", "step"}``.
 
     ``impl="pallas"`` trains end-to-end: the FAST-GAS kernel carries custom

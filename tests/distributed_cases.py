@@ -123,6 +123,55 @@ def case_cgtrans_pallas_parity():
                               request_chunk=c))(feats, nb, mk)
             close(out, ref, ("chunked", flow, chunk))
             print(f"parity path=sampled flow={flow} chunk={chunk} ok")
+
+    # scheduled=off pallas cells: the impl=pallas cells above run the
+    # destination-binned schedule (the mesh default); pin the unscheduled
+    # dense-occupancy grid as its own matrix axis on a reduced op set
+    for op in ("add", "max"):
+        f = feats
+        ref_e = cgtrans.aggregate_edges(f, *eargs, mesh=None, op=op)
+        ref_s = cgtrans.aggregate_sampled(f, nb, mk, mesh=None, op=op)
+        for flow in ("cgtrans", "baseline"):
+            out = jax.jit(lambda ff, *a, fl=flow, o=op:
+                          cgtrans.aggregate_edges(
+                              ff, *a, mesh=mesh, dataflow=fl, op=o,
+                              impl="pallas", scheduled=False))(f, *eargs)
+            close(out, ref_e, ("edges-unsched", flow, op))
+            print(f"parity path=edges flow={flow} op={op} impl=pallas "
+                  f"sched=off ok")
+            out = jax.jit(lambda ff, n_, m_, fl=flow, o=op:
+                          cgtrans.aggregate_sampled(
+                              ff, n_, m_, mesh=mesh, dataflow=fl, op=o,
+                              impl="pallas", scheduled=False))(f, nb, mk)
+            close(out, ref_s, ("sampled-unsched", flow, op))
+            print(f"parity path=sampled flow={flow} op={op} impl=pallas "
+                  f"sched=off ok")
+
+    # the HOISTED deployment (what PALLAS_CONFIG ships): schedule built once
+    # per (partition, batch), edge list restructured at partition time, and
+    # every aggregation consuming it through shard_map via schedule_applied —
+    # plus the sharded gcn_forward_full auto-hoist wrapping the same plumbing
+    sched = cgtrans.build_edge_schedule(eargs[1], mask, 256, mesh=mesh)
+    p_args = cgtrans.apply_edge_schedule(sched, *eargs)
+    ref = cgtrans.aggregate_edges(feats, *eargs, mesh=None, op="add")
+    out = jax.jit(lambda ff, sc, *a: cgtrans.aggregate_edges(
+        ff, *a, mesh=mesh, dataflow="cgtrans", op="add", impl="pallas",
+        schedule=sc, schedule_applied=True))(feats, sched, *p_args)
+    close(out, ref, ("edges hoisted",))
+    print("parity path=edges flow=cgtrans hoisted-schedule ok")
+
+    from repro.common.schema import init_params
+    from repro.core.gcn import GCNConfig, gcn_forward_full, gcn_schema
+    params = init_params(
+        gcn_schema(GCNConfig(n_features=16, hidden=8, n_classes=4)),
+        jax.random.PRNGKey(0))
+    gouts = {}
+    for impl in ("xla", "pallas"):
+        cfg = GCNConfig(n_features=16, hidden=8, n_classes=4, impl=impl)
+        gouts[impl] = jax.jit(lambda pp, ff, c=cfg: gcn_forward_full(
+            pp, ff, *eargs, c, mesh=mesh))(params, feats)
+    close(gouts["pallas"], gouts["xla"], ("gcn-full hoisted",))
+    print("parity gcn-full sharded hoisted-schedule ok")
     print("cgtrans pallas parity ok")
 
 
@@ -204,6 +253,47 @@ def case_cgtrans_grad_parity():
             gf = sgrad(feats, flow, "add", "pallas", mesh, chunk)
             close(gf, ref, ("chunked grad", flow, chunk))
             print(f"grad path=sampled flow={flow} chunk={chunk} ok")
+
+    # scheduled=off pallas grad cells (the pallas cells above run the mesh
+    # default, i.e. scheduled): pin the unscheduled backward too
+    def eloss_unsched(f, w, flow, op):
+        out = cgtrans.aggregate_edges(f, src, dst, w, mask, mesh=mesh,
+                                      dataflow=flow, op=op, impl="pallas",
+                                      scheduled=False)
+        return jnp.sum(jnp.where(jnp.isfinite(out), out, 0.0) * u_e)
+
+    egrad_u = jax.jit(jax.grad(eloss_unsched, argnums=(0, 1)),
+                      static_argnums=(2, 3))
+    for op in ("add", "max"):
+        ref_f, ref_w = egrad(feats, wts, "cgtrans", op, "xla", None)
+        for flow in ("cgtrans", "baseline"):
+            gf, gw = egrad_u(feats, wts, flow, op)
+            close(gf, ref_f, ("edges d_feats unsched", flow, op))
+            close(gw, ref_w, ("edges d_weights unsched", flow, op))
+            print(f"grad path=edges flow={flow} op={op} impl=pallas "
+                  f"sched=off ok")
+
+    # the HOISTED deployment's backward: schedule built/applied once at
+    # partition time, grads pulled through schedule_applied aggregation —
+    # d_feats matches the unpermuted reference (edge order never touches
+    # the row space), d_weights matches the reference permuted per shard
+    sched = cgtrans.build_edge_schedule(dst, mask, 256, mesh=mesh)
+    p_src, p_dst, p_wts, p_mask = cgtrans.apply_edge_schedule(
+        sched, src, dst, wts, mask)
+
+    def hloss(f, w):
+        out = cgtrans.aggregate_edges(f, p_src, p_dst, w, p_mask, mesh=mesh,
+                                      dataflow="cgtrans", op="add",
+                                      impl="pallas", schedule=sched,
+                                      schedule_applied=True)
+        return jnp.sum(jnp.where(jnp.isfinite(out), out, 0.0) * u_e)
+
+    ref_f, ref_w = egrad(feats, wts, "cgtrans", "add", "xla", None)
+    gf, gw = jax.jit(jax.grad(hloss, argnums=(0, 1)))(feats, p_wts)
+    close(gf, ref_f, ("hoisted d_feats",))
+    close(gw, jnp.take_along_axis(ref_w, sched.perm, axis=1),
+          ("hoisted d_weights",))
+    print("grad path=edges hoisted-schedule ok")
 
     _train_parity_on_mesh(mesh)
     print("cgtrans grad parity ok")

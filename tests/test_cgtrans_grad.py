@@ -59,9 +59,10 @@ def _masked_linear_loss(out, u):
 # 1. in-process grad matrix (single-shard reference path)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("scheduled", [False, True])
 @pytest.mark.parametrize("op", GRAD_OPS)
 @pytest.mark.parametrize("e", [37, 128])      # ragged + tile-aligned
-def test_edges_grad_pallas_vs_xla_vs_fd(rng, op, e):
+def test_edges_grad_pallas_vs_xla_vs_fd(rng, op, e, scheduled):
     P_, part, F = 2, 16, 4
     feats = jnp.asarray(rng.standard_normal((P_, part, F)).astype(np.float32))
     src = jnp.asarray(rng.integers(0, part, (P_, e)).astype(np.int32))
@@ -72,7 +73,7 @@ def test_edges_grad_pallas_vs_xla_vs_fd(rng, op, e):
 
     def loss(f, wts, impl):
         out = cgtrans.aggregate_edges(f, src, dst, wts, m, mesh=None,
-                                      op=op, impl=impl)
+                                      op=op, impl=impl, scheduled=scheduled)
         return _masked_linear_loss(out, u)
 
     grads = {impl: jax.grad(lambda f, wts: loss(f, wts, impl),
@@ -234,20 +235,28 @@ def test_property_scatter_weighted_vjp_matches_oracle(e, r, op, seed):
 def test_backward_scatter_routes_through_kernel(rng, monkeypatch):
     """The acceptance bar: the backward really dispatches the FAST-GAS
     kernel — not a silent XLA fallback. Count kernel-wrapper invocations
-    around ``jax.vjp``: the pallas gather's forward is a plain take (zero
-    kernel calls) but pulling its cotangent MUST hit the kernel (the
-    backward of a gather is a scatter), and the max-scatter's backward must
-    hit it again for the tie-count router."""
+    (both the plain and the fused dispatch — the gather VJP and the
+    tie-count router now use the fused entry) around ``jax.vjp``: the
+    pallas gather's forward is a plain take (zero kernel calls) but pulling
+    its cotangent MUST hit the kernel (the backward of a gather is a
+    scatter), and the max-scatter's backward must hit it again for the
+    tie-count router."""
     from repro.kernels.gas_scatter import ops as gas_ops
 
     count = {"n": 0}
-    real = gas_ops.gas_scatter
+    real_plain = gas_ops.gas_scatter
+    real_fused = gas_ops.gas_scatter_fused
 
-    def counting(*args, **kwargs):
+    def counting_plain(*args, **kwargs):
         count["n"] += 1
-        return real(*args, **kwargs)
+        return real_plain(*args, **kwargs)
 
-    monkeypatch.setattr(gas_ops, "gas_scatter", counting)
+    def counting_fused(*args, **kwargs):
+        count["n"] += 1
+        return real_fused(*args, **kwargs)
+
+    monkeypatch.setattr(gas_ops, "gas_scatter", counting_plain)
+    monkeypatch.setattr(gas_ops, "gas_scatter_fused", counting_fused)
 
     table = jnp.asarray(rng.standard_normal((16, 4)).astype(np.float32))
     ids = jnp.asarray(rng.integers(0, 16, 23).astype(np.int32))
@@ -398,6 +407,24 @@ def test_mesh_grad_parity_chunked(grad_parity_report, flow, chunk):
     line = f"grad path=sampled flow={flow} chunk={chunk} ok"
     assert line in grad_parity_report, (
         f"missing/failed chunked grad cell: {line!r}")
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("flow", FLOWS)
+@pytest.mark.parametrize("op", ["add", "max"])
+def test_mesh_grad_parity_scheduled_off(grad_parity_report, op, flow):
+    """pallas grads default to the scheduled path on the mesh — these cells
+    pin the scheduled=off (dense-occupancy) backward as its own axis."""
+    line = f"grad path=edges flow={flow} op={op} impl=pallas sched=off ok"
+    assert line in grad_parity_report, (
+        f"missing/failed scheduled-off grad cell: {line!r}")
+
+
+@pytest.mark.distributed
+def test_mesh_grad_hoisted_schedule(grad_parity_report):
+    """The hoisted deployment's backward on the real mesh: d_feats matches
+    the unpermuted reference, d_weights un-permutes per shard."""
+    assert "grad path=edges hoisted-schedule ok" in grad_parity_report
 
 
 @pytest.mark.distributed

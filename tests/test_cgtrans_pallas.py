@@ -2,11 +2,14 @@
 
 Three layers of guarantees:
 
-1. **In-process (1-device) matrix** — for every op, ``impl="pallas"`` ≡
+1. **In-process (1-device) matrix** — for every op × scheduled ∈ {on, off}
+   (the destination-binned locality pass), ``impl="pallas"`` ≡
    ``impl="xla"`` on the single-shard reference path of both aggregation
    entry points, including ragged/non-tile-aligned edge counts and
    all-masked inputs. Runs on the plain pytest topology (no mesh needed:
-   unsharded, impl is the only variable).
+   unsharded, impl/scheduled are the only variables). The scheduler's own
+   tier (``tests/test_gas_schedule.py``) additionally asserts scheduled ≡
+   unscheduled bit-exactness and the idle-skip round counts.
 2. **Property tests** (``_propcheck``) — the chunked request stream is
    *bit-exact* with the unchunked path for arbitrary ``request_chunk``
    (chunking partitions seeds, never a seed's K contributions), and the
@@ -47,9 +50,10 @@ def _close(a, b, tol=1e-4):
 # 1. in-process differential matrix (single-shard reference path)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("scheduled", [False, True])
 @pytest.mark.parametrize("op", OPS)
 @pytest.mark.parametrize("e", [1, 37, 128, 517])   # ragged + tile-aligned
-def test_edges_pallas_vs_xla(rng, op, e):
+def test_edges_pallas_vs_xla(rng, op, e, scheduled):
     P_, part, F = 2, 32, 8
     feats = jnp.asarray(_feats(rng, P_ * part, F, op)).reshape(P_, part, F)
     src = jnp.asarray(rng.integers(0, part, (P_, e)).astype(np.int32))
@@ -57,7 +61,8 @@ def test_edges_pallas_vs_xla(rng, op, e):
     w = jnp.asarray(rng.standard_normal((P_, e)).astype(np.float32))
     m = jnp.asarray(rng.random((P_, e)) < 0.8)
     outs = {impl: cgtrans.aggregate_edges(feats, src, dst, w, m, mesh=None,
-                                          op=op, impl=impl)
+                                          op=op, impl=impl,
+                                          scheduled=scheduled)
             for impl in ("xla", "pallas")}
     _close(outs["pallas"], outs["xla"])
 
@@ -77,15 +82,17 @@ def test_edges_all_masked(rng, op):
     _close(outs["pallas"], outs["xla"])
 
 
+@pytest.mark.parametrize("scheduled", [False, True])
 @pytest.mark.parametrize("op", OPS)
 @pytest.mark.parametrize("k", [1, 7, 16])
-def test_sampled_pallas_vs_xla(rng, op, k):
+def test_sampled_pallas_vs_xla(rng, op, k, scheduled):
     P_, part, F, B = 2, 32, 8, 13
     feats = jnp.asarray(_feats(rng, P_ * part, F, op)).reshape(P_, part, F)
     nb = jnp.asarray(rng.integers(0, P_ * part, (P_, B, k)).astype(np.int32))
     mk = jnp.asarray(rng.random((P_, B, k)) < 0.8)
     outs = {impl: cgtrans.aggregate_sampled(feats, nb, mk, mesh=None,
-                                            op=op, impl=impl)
+                                            op=op, impl=impl,
+                                            scheduled=scheduled)
             for impl in ("xla", "pallas")}
     _close(outs["pallas"], outs["xla"])
 
@@ -176,3 +183,26 @@ def test_mesh_parity_chunked(pallas_parity_report, flow, chunk):
     line = f"parity path=sampled flow={flow} chunk={chunk} ok"
     assert line in pallas_parity_report, (
         f"missing/failed chunked-request cell: {line!r}")
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("flow", FLOWS)
+@pytest.mark.parametrize("op", ["add", "max"])
+@pytest.mark.parametrize("path", ["edges", "sampled"])
+def test_mesh_parity_scheduled_off(pallas_parity_report, path, op, flow):
+    """pallas defaults to scheduled on the mesh — these cells pin the
+    scheduled=off pallas path (dense-occupancy grid) as a separate axis."""
+    line = f"parity path={path} flow={flow} op={op} impl=pallas sched=off ok"
+    assert line in pallas_parity_report, (
+        f"missing/failed scheduled-off cell: {line!r}")
+
+
+@pytest.mark.distributed
+def test_mesh_parity_hoisted_schedule(pallas_parity_report):
+    """The deployment path: build_edge_schedule + apply_edge_schedule +
+    schedule_applied through shard_map, and gcn_forward_full's sharded
+    auto-hoist — locked in on the real 8-way mesh, not just benchmarked."""
+    assert "parity path=edges flow=cgtrans hoisted-schedule ok" in \
+        pallas_parity_report
+    assert "parity gcn-full sharded hoisted-schedule ok" in \
+        pallas_parity_report
