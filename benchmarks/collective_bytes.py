@@ -33,6 +33,14 @@ Measurements per run:
   (forward + backward + AdamW) on the 8-way mesh, ``impl="xla"`` vs
   ``impl="pallas"`` scheduled/unscheduled — the kernel carries custom VJPs,
   so the backward runs through FAST-GAS too.
+* ``coalesce``/``coalesce_grad`` rows — request coalescing, counted: the
+  sage-shaped two-stream fetch (self-row lookup + 2-hop block) issued as
+  ONE ``aggregate_multi`` command block vs two ``aggregate_sampled`` calls.
+  Collectives-per-step (jaxpr-level all_gather/all_to_all counts,
+  deterministic) go 2 → 1 on cgtrans and halve on baseline; kernel gathers
+  go 2 → 1; pallas fwd+bwd kernel scatters go 3 → 2 (one backward cotangent
+  scatter instead of two). Asserted by the exit code via
+  ``check_coalesce_rows``.
 
 Interpret-mode caveat: off-TPU the kernel runs in the Pallas interpreter,
 which pays a fixed emulation cost per grid round and per dispatch; treat
@@ -208,6 +216,107 @@ def bench_skip_rate(ways: int = 8, V: int = 1024, E: int = 16384) -> list:
     return rows
 
 
+def bench_coalesce(ways: int = 8, B: int = 8, K1: int = 3, K2: int = 10,
+                   F: int = 64, part: int = 32) -> list:
+    """Request coalescing, measured the way it is claimed: DETERMINISTIC
+    counters, not wall clock. For a sage-shaped request pair (the K=1
+    self-row lookup + the fan-out-K2 2-hop block), count what the separate
+    two-stream form issues vs the coalesced ``aggregate_multi`` command
+    block:
+
+    * collectives per step (jaxpr-level, immune to XLA combiner passes):
+      all_gather (the request broadcast) and all_to_all (the result
+      shipment) — cgtrans: 2 → 1 each;
+    * GAS engine dispatches (trace-time counters): finds 2 → 1, and under
+      pallas the fwd+bwd kernel scatters 3 → 2 (ONE backward cotangent
+      scatter where the separate form pays two);
+    * collective bytes from the compiled HLO, for the record (coalescing
+      is about round-trips; bytes stay ≈ equal by construction).
+    """
+    from repro.core import gas
+    from repro.launch.jaxpr_stats import collective_counts
+
+    mesh = make_data_mesh(ways)
+    R1 = B * (1 + K1)
+    feats = jnp.zeros((ways, part, F))
+    b1 = (jnp.zeros((ways, R1, 1), jnp.int32), jnp.ones((ways, R1, 1), bool))
+    b2 = (jnp.zeros((ways, R1, K2), jnp.int32),
+          jnp.ones((ways, R1, K2), bool))
+
+    def sep(f, flow, impl="xla"):
+        a = cgtrans.aggregate_sampled(f, *b1, mesh=mesh, dataflow=flow,
+                                      impl=impl)
+        b = cgtrans.aggregate_sampled(f, *b2, mesh=mesh, dataflow=flow,
+                                      impl=impl)
+        return a, b
+
+    def coa(f, flow, impl="xla"):
+        return cgtrans.aggregate_multi(f, (b1, b2), mesh=mesh, dataflow=flow,
+                                       impl=impl)
+
+    rows = []
+    for flow in FLOWS:
+        for form, fn in (("separate", sep), ("coalesced", coa)):
+            with gas.count_dispatches() as disp:
+                colls = collective_counts(lambda f: fn(f, flow), feats)
+            rows.append({
+                "mode": "coalesce", "ways": ways, "flow": flow, "form": form,
+                "B": B, "K1": K1, "K2": K2, "F": F,
+                "all_gather": int(colls["all_gather"]),
+                "all_to_all": int(colls["all_to_all"]),
+                "finds": int(disp["find"]), "reduces": int(disp["reduce"]),
+                "bytes": _collective_bytes(lambda f: fn(f, flow), feats),
+            })
+
+    # the backward, counted on the pallas path: grad-of-sum traces the
+    # custom VJPs, so the kernel_scatter count covers fwd + bwd dispatches
+    for form, fn in (("separate", sep), ("coalesced", coa)):
+        with gas.count_dispatches() as disp:
+            jax.make_jaxpr(jax.grad(
+                lambda f: sum(jnp.sum(o) for o in
+                              fn(f, "cgtrans", "pallas"))))(feats)
+        rows.append({
+            "mode": "coalesce_grad", "ways": ways, "flow": "cgtrans",
+            "form": form, "impl": "pallas",
+            "finds": int(disp["find"]),
+            "kernel_scatters": int(disp["kernel_scatter"]),
+        })
+    return rows
+
+
+def check_coalesce_rows(rows) -> list:
+    """The coalescing mechanism, asserted deterministically. Returns a list
+    of failure strings (empty = the claim holds)."""
+    by = {(r["flow"], r["form"]): r for r in rows if r["mode"] == "coalesce"}
+    gby = {r["form"]: r for r in rows if r["mode"] == "coalesce_grad"}
+    failures = []
+
+    cs, cc = by[("cgtrans", "separate")], by[("cgtrans", "coalesced")]
+    if not (cs["all_gather"] == 2 and cs["all_to_all"] == 2):
+        failures.append(f"separate cgtrans should issue 2 collectives of "
+                        f"each kind per step, saw {cs}")
+    if not (cc["all_gather"] == 1 and cc["all_to_all"] == 1):
+        failures.append(f"coalesced cgtrans must issue ONE all_gather + ONE "
+                        f"all_to_all per step, saw {cc}")
+    bs, bc = by[("baseline", "separate")], by[("baseline", "coalesced")]
+    if not (bc["all_gather"] * 2 == bs["all_gather"]
+            and bc["all_to_all"] * 2 == bs["all_to_all"]):
+        failures.append(f"coalescing must halve baseline collectives, saw "
+                        f"sep={bs} coa={bc}")
+    for flow in FLOWS:
+        s, c = by[(flow, "separate")], by[(flow, "coalesced")]
+        if not (s["finds"] == 2 and c["finds"] == 1):
+            failures.append(f"{flow}: kernel gathers must go 2 → 1, saw "
+                            f"sep={s['finds']} coa={c['finds']}")
+    gs, gc = gby["separate"], gby["coalesced"]
+    if not (gs["kernel_scatters"] == 3 and gc["kernel_scatters"] == 2):
+        failures.append(
+            f"pallas fwd+bwd kernel scatters must go 3 → 2 (one backward "
+            f"cotangent scatter instead of two), saw "
+            f"sep={gs['kernel_scatters']} coa={gc['kernel_scatters']}")
+    return failures
+
+
 def bench_train_step_time(ways: int = 8) -> list:
     """Wall time of one jitted GraphSAGE+CGTrans TRAIN step on the sharded
     mesh, impl="xla" vs impl="pallas" scheduled/unscheduled — the
@@ -324,6 +433,20 @@ def main(argv=None) -> int:
               f"{r['live_rounds']:>5d}/{r['total_rounds']:<5d} rounds live  "
               f"skip_rate={r['skip_rate']:.2f}")
 
+    # request coalescing, counted: the sage-shaped two-stream fetch as one
+    # SSD command block — collectives-per-step 2 → 1 (cgtrans), finds
+    # 2 → 1, pallas fwd+bwd kernel scatters 3 → 2; bytes for the record
+    coalesce_rows = bench_coalesce(8)
+    for r in coalesce_rows:
+        rows.append(r)
+        if r["mode"] == "coalesce":
+            print(f"coalesce/{r['flow']:<8s} {r['form']:<9s} "
+                  f"all_gather={r['all_gather']} all_to_all={r['all_to_all']} "
+                  f"finds={r['finds']}  {r['bytes']:>10.0f}B")
+        else:
+            print(f"coalesce_grad/pallas {r['form']:<9s} "
+                  f"finds={r['finds']} kernel_scatters={r['kernel_scatters']}")
+
     # one full train step (fwd + bwd + AdamW): the differentiable pallas
     # path vs the xla oracle — the backward also runs through the kernel
     for r in bench_train_step_time(8):
@@ -346,6 +469,7 @@ def main(argv=None) -> int:
            if r["mode"] == "agg_time"}
     sk = [r for r in rows if r["mode"] == "skip_rate"
           and r["graph"] == "clustered" and r["scheduled"]]
+    co = {(r["flow"], r["form"]): r for r in rows if r["mode"] == "coalesce"}
     summary = {
         "claim": "baseline/cgtrans collective bytes > K/4 on the 8-way mesh; "
                  f">= {PAPER_MIN_RATIO}x at the paper's K={PAPER_K}",
@@ -361,6 +485,15 @@ def main(argv=None) -> int:
         "agg_sched_vs_unsched_pallas":
             agg[("pallas", True)] / agg[("pallas", False)],
         "clustered_skipped_rounds": sk[0]["skipped_rounds"] if sk else 0,
+        # the coalescing headline: collectives-per-step on the cgtrans
+        # sampled path, separate two-stream form vs the coalesced command
+        # block (each = all_gather + all_to_all counts, deterministic)
+        "coalesce_collectives_separate":
+            co[("cgtrans", "separate")]["all_gather"]
+            + co[("cgtrans", "separate")]["all_to_all"],
+        "coalesce_collectives_coalesced":
+            co[("cgtrans", "coalesced")]["all_gather"]
+            + co[("cgtrans", "coalesced")]["all_to_all"],
     }
     # the scheduler mechanism, asserted DETERMINISTICALLY (round counts,
     # not wall times — timing on this topology is an estimator, the counts
@@ -379,6 +512,8 @@ def main(argv=None) -> int:
         mech_failures.append(
             f"scheduled live rounds ({cs['live_rounds']}) not below the "
             f"unscheduled occupancy ({cu['live_rounds']})")
+    # the coalescing mechanism, asserted the same way (counters, not clocks)
+    mech_failures += check_coalesce_rows(coalesce_rows)
 
     out = {"jax_version": jax.__version__, "devices": n_dev,
            "rows": rows, "summary": summary}

@@ -186,11 +186,21 @@ def bench_collective_bytes(fast=False):
             tag = "_sched" if r.get("scheduled") else ""
             print(f"train_step_{r['impl']}{tag},{r['us']:.0f},"
                   f"loss={r['loss']:.3f};ways={r['ways']}")
+        elif r["mode"] == "coalesce":
+            print(f"coalesce_{r['flow']}_{r['form']},0.0,"
+                  f"all_gather={r['all_gather']};all_to_all={r['all_to_all']};"
+                  f"finds={r['finds']};bytes={r['bytes']:.0f}")
+        elif r["mode"] == "coalesce_grad":
+            print(f"coalesce_grad_{r['form']},0.0,"
+                  f"finds={r['finds']};kernel_scatters={r['kernel_scatters']}")
     s = data["summary"]
     print(f"collective_bytes_summary,0.0,"
           f"{s['checked'] - s['failed']}/{s['checked']}_rows_pass;"
           f"paper_fig_ratio={s.get('paper_figure_ratio', 0.0):.1f}x;"
-          f"agg_sched_vs_xla={s.get('agg_pallas_sched_vs_xla', 0.0):.2f}")
+          f"agg_sched_vs_xla={s.get('agg_pallas_sched_vs_xla', 0.0):.2f};"
+          f"coalesce_collectives="
+          f"{s.get('coalesce_collectives_separate', '?')}to"
+          f"{s.get('coalesce_collectives_coalesced', '?')}")
 
 
 def bench_kernels(fast=False):

@@ -50,6 +50,11 @@ def main():
     ap.add_argument("--request-chunk", type=int, default=None,
                     help="SSD command-queue depth: seeds per sampled-"
                          "aggregation request burst (None = unchunked)")
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="issue the self-row lookup and the 2-hop "
+                         "aggregation as two separate request streams "
+                         "(the legacy two-body form) instead of ONE "
+                         "coalesced SSD command block")
     ap.add_argument("--ckpt-dir", default="/tmp/graphsage_ckpt")
     args = ap.parse_args()
 
@@ -70,7 +75,8 @@ def main():
 
     cfg = GCNConfig(n_features=args.features, hidden=args.hidden, n_classes=16,
                     fanout=args.fanout, dataflow=args.dataflow,
-                    impl=args.impl, request_chunk=args.request_chunk)
+                    impl=args.impl, request_chunk=args.request_chunk,
+                    coalesce=not args.no_coalesce)
     tc = TrainConfig(learning_rate=3e-3, warmup_steps=20,
                      total_steps=args.steps, weight_decay=0.01)
     params = init_params(gcn_schema(cfg), jax.random.PRNGKey(0))

@@ -5,18 +5,28 @@ message instead of letting 12 test modules error at collection/runtime.
 Exit 0 = the tier-1 suite (including the distributed subprocess cases) can
 run here; exit 1 = something required is missing, with the reason printed.
 
-Run:  PYTHONPATH=src python scripts/check_env.py
-(``scripts/ci.sh`` runs this, then tier-1.)
+Run:  PYTHONPATH=src python scripts/check_env.py [--json]
+(``scripts/ci.sh`` runs this, then tier-1; the CI workflow runs it with
+``--json`` and folds the machine-readable matrix into the step summary.)
 """
 
 from __future__ import annotations
 
+import argparse
 import importlib
+import json
 import os
 import sys
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", action="store_true",
+                    help="emit the detected matrix as JSON "
+                         "({matrix, failures, ok}) instead of the table — "
+                         "for the CI step summary")
+    args = ap.parse_args(argv)
+
     failures = []
     rows = []
 
@@ -142,6 +152,34 @@ def main() -> int:
             f"JAX — the scheduler tier (ci.sh --tier sched) cannot run: "
             f"{e!r}")
 
+    # -- coalesced request blocks (one SSD command block ≡ two calls) ------
+    # the coalesce tier (tests/test_cgtrans_coalesce.py, ci.sh --tier
+    # coalesce) runs aggregate_multi — the self-lookup + fan-out segments
+    # fused into one gather/all_to_all; probe that one combined block
+    # reproduces two separate aggregate_sampled calls bit-for-bit HERE
+    try:
+        import jax.numpy as jnp
+        from repro.core import cgtrans
+
+        feats = jnp.arange(2 * 8 * 4, dtype=jnp.float32).reshape(2, 8, 4)
+        nb1 = jnp.array([[[3], [9]], [[0], [15]]], jnp.int32)
+        mk1 = jnp.ones((2, 2, 1), bool)
+        nb2 = jnp.array([[[1, 2, 8]], [[4, 5, 11]]], jnp.int32)
+        mk2 = jnp.array([[[True, True, False]], [[True, False, True]]])
+        o1, o2 = cgtrans.aggregate_multi(feats, ((nb1, mk1), (nb2, mk2)),
+                                         mesh=None)
+        s1 = cgtrans.aggregate_sampled(feats, nb1, mk1, mesh=None)
+        s2 = cgtrans.aggregate_sampled(feats, nb2, mk2, mesh=None)
+        assert bool((o1 == s1).all()) and bool((o2 == s2).all()), (o1, o2)
+        rows.append(("coalesced requests",
+                     "functional (one command block ≡ two calls)"))
+    except Exception as e:  # noqa: BLE001 — report, don't crash the report
+        rows.append(("coalesced requests", "BROKEN"))
+        failures.append(
+            f"aggregate_multi does not reproduce the separate request "
+            f"streams — the coalesce tier (ci.sh --tier coalesce) cannot "
+            f"run: {e!r}")
+
     # -- fake-device topology for the distributed cases --------------------
     flag = "--xla_force_host_platform_device_count=8"
     rows.append(("distributed tests",
@@ -154,6 +192,11 @@ def main() -> int:
     except ImportError:
         rows.append(("hypothesis",
                      "absent — tests/_propcheck.py deterministic fallback"))
+
+    if args.json:
+        print(json.dumps({"matrix": dict(rows), "failures": failures,
+                          "ok": not failures}, indent=2))
+        return 1 if failures else 0
 
     width = max(len(k) for k, _ in rows)
     print("repro environment support matrix")

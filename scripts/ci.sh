@@ -13,29 +13,52 @@
 #                                        # schedule invariants, fused kernel
 #                                        # ≡ oracle, scheduled ≡ unscheduled
 #                                        # bit-exact, idle-skip counters
+#   scripts/ci.sh --tier coalesce        # the coalesced-request tier only:
+#                                        # one SSD command block ≡ two
+#                                        # separate streams (values, grads,
+#                                        # collective/dispatch counters)
+#   scripts/ci.sh --list-tiers           # machine-readable lane list (one
+#                                        # per line) — .github/workflows/
+#                                        # ci.yml builds its job matrix
+#                                        # from this, so the two can't drift
 #   scripts/ci.sh -m "not distributed"   # extra args forwarded to pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# every lane the workflow matrix runs; `full` is tier-1 (the workflow passes
+# it `-m "not distributed"` — the subprocess cases already run one-per-lane)
+TIERS=(pallas grad sched coalesce full)
+
 TIER="full"
-ARGS=()
+# seeded with the always-on flags so the array is never empty: the classic
+# `${ARGS[@]+"${ARGS[@]}"}` guard mis-splits quoted args containing spaces
+# (e.g. `-m "not distributed"`) on bash 4.2/4.3 under `set -u`, while a
+# non-empty `"${ARGS[@]}"` expansion is safe on every bash
+ARGS=(-x -q)
 while [[ $# -gt 0 ]]; do
-  if [[ "$1" == "--tier" ]]; then
-    TIER="${2:?--tier needs an argument (full|pallas|grad|sched)}"
-    shift 2
-  else
-    ARGS+=("$1")
-    shift
-  fi
+  case "$1" in
+    --tier)
+      TIER="${2:?--tier needs an argument (use --list-tiers)}"
+      shift 2
+      ;;
+    --list-tiers)
+      printf '%s\n' "${TIERS[@]}"
+      exit 0
+      ;;
+    *)
+      ARGS+=("$1")
+      shift
+      ;;
+  esac
 done
 
 python scripts/check_env.py
 
 case "$TIER" in
   full)
-    python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
+    python -m pytest "${ARGS[@]}"
     ;;
   pallas)
     # the differential tier: pallas ≡ xla ≡ reference across both sharded
@@ -43,24 +66,32 @@ case "$TIER" in
     # topology; the on-mesh matrix still subprocesses (and sets its own
     # XLA_FLAGS), so forcing the flag here is safe for this lane.
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
-      python -m pytest -x -q tests/test_cgtrans_pallas.py ${ARGS[@]+"${ARGS[@]}"}
+      python -m pytest "${ARGS[@]}" tests/test_cgtrans_pallas.py
     ;;
   grad)
     # the gradient-parity tier: jax.grad through the FAST-GAS custom VJPs
     # ≡ the xla oracle ≡ finite differences, chunked ≡ unchunked, plus the
     # pallas train-step parity. Same topology note as the pallas lane.
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
-      python -m pytest -x -q tests/test_cgtrans_grad.py ${ARGS[@]+"${ARGS[@]}"}
+      python -m pytest "${ARGS[@]}" tests/test_cgtrans_grad.py
     ;;
   sched)
     # the scheduler-parity tier: destination-binned schedule invariants,
     # the fused weighted kernel vs the jnp oracle, scheduled ≡ unscheduled
     # bit-exactness (values AND gradients), and the idle-skip round
     # counters on clustered graphs. Single-process (no mesh needed).
-    python -m pytest -x -q tests/test_gas_schedule.py ${ARGS[@]+"${ARGS[@]}"}
+    python -m pytest "${ARGS[@]}" tests/test_gas_schedule.py
+    ;;
+  coalesce)
+    # the coalesced-request tier: aggregate_multi (one SSD command block)
+    # ≡ separate aggregate_sampled streams, bit-exact values+grads, the
+    # segment-descriptor invariants, and the deterministic counters
+    # (finds 2 → 1, backward scatters 2 → 1, collectives 2 → 1 on-mesh).
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+      python -m pytest "${ARGS[@]}" tests/test_cgtrans_coalesce.py
     ;;
   *)
-    echo "unknown --tier '$TIER' (expected: full|pallas|grad|sched)" >&2
+    echo "unknown --tier '$TIER' (expected one of: ${TIERS[*]})" >&2
     exit 2
     ;;
 esac

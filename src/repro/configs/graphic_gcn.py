@@ -3,12 +3,15 @@
 Fan-out 50 per the paper §4.2 ("GraphSAGE samples 50 neighbors at a time
 according to the general setup"); feature widths from Table II.
 
-``impl`` / ``request_chunk`` are the two FAST-GAS deployment knobs surfaced
-from ``repro.core.cgtrans``: ``impl="pallas"`` runs every per-shard
-aggregation through the in-SSD kernel (interpret-mode off-TPU), and
+``impl`` / ``request_chunk`` / ``coalesce`` are the FAST-GAS deployment
+knobs surfaced from ``repro.core.cgtrans``: ``impl="pallas"`` runs every
+per-shard aggregation through the in-SSD kernel (interpret-mode off-TPU),
 ``request_chunk`` is the SSD command-queue depth — the sampled dataflow
 streams its id block through the collectives that many seeds at a time,
-bounding per-shard peak gather memory. Both backends train end-to-end: the
+bounding per-shard peak gather memory — and ``coalesce`` fuses
+``sage_forward``'s self-row lookup and 2-hop aggregation into ONE command
+block (``aggregate_multi``): one request broadcast, one kernel gather, one
+result shipment, one backward cotangent scatter per step. Both backends train end-to-end: the
 kernel carries custom VJPs whose backward is itself GAS work
 (``repro.core.gas``), so ``PALLAS_CONFIG`` is a full training deployment,
 not just the inference/benchmark one — gradient parity with ``CONFIG`` is
@@ -30,6 +33,10 @@ CONFIG = GCNConfig(
     n_layers=2,
     impl="xla",        # oracle backend (training default)
     request_chunk=None,  # unchunked: one request burst per batch
+    coalesce=True,     # sage_forward's self-lookup + 2-hop requests ride
+                       # ONE SSD command block (collectives-per-step 2 → 1;
+                       # the default — spelled out because it IS the
+                       # paper's command-queue batching)
 )
 
 # The deployed FAST-GAS configuration: Pallas kernel aggregation + a 16-seed

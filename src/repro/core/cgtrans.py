@@ -27,6 +27,26 @@ paper's SSD command-queue analogue — bounding per-shard peak gather memory at
 bit-exact with the unchunked one (chunking partitions *seeds*, never a seed's
 K contributions), which ``tests/test_cgtrans_pallas.py`` asserts.
 
+**Coalesced request blocks.** ``aggregate_multi`` is the command-queue
+batching applied across request *streams*: several sampled segments of
+different fan-out (e.g. ``sage_forward``'s K=1 self-row lookup + its K2
+2-hop block) concatenate into one (ids ‖ ``SegmentDescriptor``) command
+block and run through ONE ``shard_map`` body — one ``all_gather`` of the
+concatenated id stream (masks ride a ``-1`` encoding, so the request
+broadcast is a single array), one kernel gather (``_multi_find``), one
+``all_to_all`` of the concatenated partials (for ``op="add"`` the
+contribution counts travel as one extra feature column instead of a second
+collective), and — under ``impl="pallas"`` — one backward cotangent
+scatter, split per segment by the static descriptor the VJP closes over.
+``aggregate_sampled`` is its single-segment form, so the plain sampled path
+inherits the single-collective request/response pair too; the K=1 segment
+keeps the pure-find specialization (no kernel round-trip), and chunk
+boundaries always respect segment boundaries. The coalesce tier
+(``tests/test_cgtrans_coalesce.py``, ``ci.sh --tier coalesce``) asserts
+coalesced ≡ separate bit-exactly (values and gradients) and pins the
+counters: collectives-per-step 2 → 1, finds 2 → 1, backward scatters
+2 → 1.
+
 **Locality scheduling.** ``scheduled`` (default: on whenever
 ``impl="pallas"``) runs the paper's Fig 11(c) locality pass before the
 per-shard reduction: ``gas.schedule_edges`` counting-sorts each shard's edge
@@ -66,7 +86,7 @@ across the whole matrix.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -312,43 +332,47 @@ def _op_identity(dtype, op: gas.Op):
     return jnp.asarray(info.min if op == "max" else info.max, dtype)
 
 
-def _seed_reduce(f_shard, rel, own, op: gas.Op, impl: str,
-                 scheduled: bool = False):
-    """Per-request-block GAS reduction: (R, K) local ids → (R, F) partials.
+def _seed_reduce_rows(rows, own, op: gas.Op, impl: str,
+                      scheduled: bool = False):
+    """Per-request-block GAS reduction on PRE-GATHERED candidate rows:
+    (R, K, F) rows + (R, K) validity → (R, F) partials + (R,) own counts.
 
     This is the in-SSD step of the sampled path — the seed index is the
     destination row, so the fan-out reduction is exactly a FAST-GAS scatter
     (``impl`` selects the backend). Rows with no owned neighbor hold the op
-    identity (0 for add/or, ±inf for max/min). Also returns (R,) own counts.
-    The seed stream ``repeat(arange(R), K)`` is destination-binned by
-    construction, so ``scheduled`` derives the idle-skip band sort-free
-    (``assume_sorted``) — no permutation is ever applied here.
+    identity (0 for add/or, ±inf for max/min). The gather itself is the
+    caller's (``aggregate_multi`` issues ONE combined gather for a whole
+    coalesced command block and slices it per segment). The seed stream
+    ``repeat(arange(R), K)`` is destination-binned by construction, so
+    ``scheduled`` derives the idle-skip band sort-free (``assume_sorted``)
+    — no permutation is ever applied here; the schedule is only built
+    where it is consumed (the pallas kernel — XLA ignores it).
     """
-    R, K = rel.shape
-    rows = gas.gas_gather(f_shard, rel.reshape(-1), impl=impl)   # (R·K, F)
+    R, K, F = rows.shape
     if K == 1:
         # a single-sample request block is a pure *find*: the seed scatter
         # would be the identity permutation, so the reduction degenerates to
         # masking the gathered row with the op identity — no kernel
         # round-trip (the gather's VJP still scatters through the kernel
         # under pallas). This is the row-lookup path of ``sage_forward``.
+        flat = rows.reshape(R, F)
         if op == "or":
             # mirror the scatter path's boolean-or normalization exactly:
             # int-cast the value, clamp the or-identity at 0 (a raw
             # passthrough would leak negative/fractional values)
             red = jnp.where(own.reshape(R, 1),
-                            jnp.maximum(rows.astype(jnp.int32), 0),
-                            0).astype(rows.dtype)
+                            jnp.maximum(flat.astype(jnp.int32), 0),
+                            0).astype(flat.dtype)
         else:
-            red = jnp.where(own.reshape(R, 1), rows,
-                            _op_identity(rows.dtype, op))
+            red = jnp.where(own.reshape(R, 1), flat,
+                            _op_identity(flat.dtype, op))
         return red, own.sum(-1)
     seed = jnp.repeat(jnp.arange(R, dtype=jnp.int32), K)
     sched = (gas.schedule_edges(seed, own.reshape(-1), R, assume_sorted=True)
-             if scheduled else None)
+             if scheduled and impl == "pallas" else None)
     red = gas.gas_scatter_weighted(
-        seed, rows, jnp.ones((R * K,), jnp.float32), own.reshape(-1), R,
-        op=op, impl=impl, schedule=sched)
+        seed, rows.reshape(R * K, F), jnp.ones((R * K,), jnp.float32),
+        own.reshape(-1), R, op=op, impl=impl, schedule=sched)
     return red, own.sum(-1)
 
 
@@ -415,6 +439,266 @@ def scan_request_chunks(body, nbrs2d, mask2d, chunk: int):
     return outs.reshape(steps * chunk, -1)[:R]
 
 
+class SegmentDescriptor(NamedTuple):
+    """Static layout of a coalesced request block (one "SSD command block").
+
+    A coalesced block concatenates S request segments — each a
+    ``(rows_i, K_i)`` id/mask pair — into one flat id stream. The
+    descriptor records where every segment lives in that stream so the ONE
+    combined gather / all_to_all can be split back into per-segment
+    results, forward and backward. All fields are static Python ints:
+    under ``jit`` the descriptor is baked into the jaxpr (and closed over
+    by the custom-VJP residuals of the pallas gather), so the backward
+    splits the cotangent block along exactly the same boundaries — no
+    runtime bookkeeping crosses the bus.
+
+    ``shapes``       — per-segment (rows_i, K_i);
+    ``id_offsets``   — flat-id offset of each segment (length S+1;
+                       segment i's ids live at ``[id_offsets[i],
+                       id_offsets[i+1])``, so ``id_offsets[-1]`` is the
+                       total id count);
+    ``row_offsets``  — output-row offset of each segment (length S+1) in
+                       the concatenated (rows_tot, F) result block.
+    """
+    shapes: Tuple[Tuple[int, int], ...]
+    id_offsets: Tuple[int, ...]
+    row_offsets: Tuple[int, ...]
+
+    @property
+    def n_ids(self) -> int:
+        return self.id_offsets[-1]
+
+    @property
+    def n_rows(self) -> int:
+        return self.row_offsets[-1]
+
+
+def segment_descriptor(shapes: Sequence[Tuple[int, int]]) -> SegmentDescriptor:
+    """Build the descriptor for segments of static (rows_i, K_i) shapes."""
+    shapes = tuple((int(r), int(k)) for r, k in shapes)
+    if not shapes:
+        raise ValueError("a request block needs at least one segment")
+    if any(r < 1 or k < 1 for r, k in shapes):
+        raise ValueError(f"degenerate segment in {shapes}")
+    ids, rows = [0], [0]
+    for r, k in shapes:
+        ids.append(ids[-1] + r * k)
+        rows.append(rows[-1] + r)
+    return SegmentDescriptor(shapes, tuple(ids), tuple(rows))
+
+
+def _encode_requests(blocks):
+    """Encode each (nbrs, mask) segment as one id stream with masked
+    entries set to -1 — the request broadcast then carries ONE array
+    instead of an (ids, mask) pair: a dead id resolves as owned-by-nobody
+    on every shard (``rel < 0`` everywhere), which is exactly what the
+    mask meant. Returns the (P, N_tot) concatenated stream."""
+    flat = [jnp.where(m, nb, -1).reshape(nb.shape[0], -1)
+            for nb, m in blocks]
+    return flat[0] if len(flat) == 1 else jnp.concatenate(flat, axis=1)
+
+
+def _multi_find(table, seg_ids, op: gas.Op, impl: str, use_sched: bool):
+    """The in-SSD step of a coalesced command block: ONE combined gather
+    over every segment's encoded ids, then the per-segment seed reductions.
+
+    ``table``: (rows, F) local feature rows; ``seg_ids``: list of
+    (R_i, K_i) encoded id blocks (-1 or out-of-range = dead). Exactly one
+    ``gas_gather`` is issued regardless of segment count — under pallas its
+    custom VJP therefore scatter-adds the whole block's cotangent through
+    the kernel in ONE backward dispatch, split per segment by the same
+    static offsets. Returns a list of (red_i (R_i, F), cnt_i (R_i,))."""
+    V, F = table.shape
+    flat = (seg_ids[0].reshape(-1) if len(seg_ids) == 1 else
+            jnp.concatenate([s.reshape(-1) for s in seg_ids]))
+    own = (flat >= 0) & (flat < V)
+    rows = gas.gas_gather(table, jnp.clip(flat, 0, V - 1), impl=impl)
+    outs, off = [], 0
+    for s in seg_ids:
+        R, K = s.shape
+        outs.append(_seed_reduce_rows(
+            rows[off:off + R * K].reshape(R, K, F),
+            own[off:off + R * K].reshape(R, K), op, impl, use_sched))
+        off += R * K
+    return outs
+
+
+def aggregate_multi(
+    feats: jax.Array,     # (P, part, F) owner-sharded features
+    blocks,               # sequence of (nbrs (P, R_i, K_i), mask) segments
+    *,
+    mesh: Optional[Mesh] = None,
+    dataflow: str = "cgtrans",
+    op: gas.Op = "add",
+    impl: str = "xla",
+    request_chunk: Optional[int] = None,
+    scheduled: Optional[bool] = None,   # None → on for impl="pallas"
+):
+    """Coalesced request blocks: aggregate SEVERAL sampled request segments
+    in ONE SSD command block. Returns a tuple of (P, R_i, F), one per
+    segment, each exactly what ``aggregate_sampled`` would return for that
+    segment alone (bit-exact on integer-valued data — the coalesce tier
+    asserts it, values and gradients).
+
+    This is the paper's command-queue batching applied across *request
+    streams*, not just within one: ``sage_forward``'s self-row lookup (a
+    K=1 pure find) and its 2-hop aggregation used to run as two
+    ``shard_map`` bodies — two request broadcasts, two kernel gathers, two
+    result shipments, two backward scatters per step. Here the segments
+    concatenate into one (ids ‖ segment-descriptor) block and the sharded
+    body runs ONCE:
+
+    * **one request broadcast** — a single ``all_gather`` of the
+      concatenated id stream (masks ride the ``-1`` encoding, so no second
+      mask collective);
+    * **one kernel gather** — ``_multi_find`` resolves every segment's ids
+      against the local rows in one ``gas_gather``; per-segment reductions
+      stay separate (a K=1 segment stays the pure find with no kernel
+      round-trip, K>1 segments keep their sort-free banded schedules);
+    * **one result shipment** — per-segment partials (plus, for
+      ``op="add"``, the contribution counts as one extra feature column)
+      concatenate into a single ``all_to_all`` payload, split back on
+      arrival by the static ``SegmentDescriptor``;
+    * **one cotangent scatter** — under ``impl="pallas"`` the combined
+      gather's custom VJP scatters the whole block's cotangent through the
+      FAST-GAS kernel in one dispatch; the descriptor (closed over as a
+      static residual) splits the cotangent block the same way the forward
+      split the results.
+
+    ``request_chunk`` streams each segment through the collectives
+    ``request_chunk`` rows at a time; chunk boundaries always respect the
+    segment descriptor (a chunk never spans two segments — their K differ),
+    so chunked mode degenerates to per-segment command queues and stays
+    bit-exact with the unchunked block.
+    """
+    if dataflow not in ("cgtrans", "baseline"):
+        raise ValueError(dataflow)
+    blocks = tuple(blocks)
+    Pn, part, F = feats.shape
+    desc = segment_descriptor([nb.shape[-2:] for nb, _ in blocks])
+    use_sched = _resolve_scheduled(scheduled, impl)
+    enc = _encode_requests(blocks)                       # (P, N_tot)
+
+    def split_ids(flat):
+        """Flat (… N_tot) stream → per-segment (…·R_i, K_i) blocks."""
+        return [flat[..., desc.id_offsets[i]:desc.id_offsets[i + 1]]
+                .reshape(-1, k)
+                for i, (r, k) in enumerate(desc.shapes)]
+
+    if not is_sharded(mesh):
+        table = feats.reshape(Pn * part, F)
+        seg_enc = split_ids(enc)                         # (Pn·R_i, K_i)
+        if request_chunk is None:
+            outs = [_finalize(red, cnt, op)
+                    for red, cnt in _multi_find(table, seg_enc, op, impl,
+                                                use_sched)]
+        else:
+            def one(nb_c, m_c):
+                red, cnt = _multi_find(table, [jnp.where(m_c, nb_c, -1)],
+                                       op, impl, use_sched)[0]
+                return _finalize(red, cnt, op)
+
+            outs = [scan_request_chunks(one, e, e >= 0, request_chunk)
+                    for e in seg_enc]
+        return tuple(o.reshape(Pn, r, F)
+                     for o, (r, k) in zip(outs, desc.shapes))
+
+    n = mesh.shape[AXIS]
+    assert Pn == n, f"partitions ({Pn}) must equal data-axis size ({n})"
+
+    def shard_fn(f, ids_enc):
+        f, ids_enc = f[0], ids_enc[0]                    # (part, F), (N_tot,)
+        lo = lax.axis_index(AXIS) * part
+
+        def fetch(seg_enc):
+            """ONE command block over local segments [(r_i, k_i) encoded
+            ids] → list of (r_i, F) aggregated rows for OUR seeds."""
+            shapes = [s.shape for s in seg_enc]
+            flat = (seg_enc[0].reshape(-1) if len(seg_enc) == 1 else
+                    jnp.concatenate([s.reshape(-1) for s in seg_enc]))
+            # the request broadcast: ONE all_gather of the concatenated id
+            # stream ("addresses into the SSD" — masks ride the encoding)
+            ids = lax.all_gather(flat, AXIS)             # (n, N)
+            rel = ids - lo                               # dead ids stay < 0
+
+            if dataflow == "cgtrans":
+                # one source of truth for the segment layout: the same
+                # descriptor arithmetic callers and the VJP split by
+                offs = segment_descriptor(shapes).id_offsets
+                seg_rel = [rel[:, offs[i]:offs[i + 1]].reshape(n * r, k)
+                           for i, (r, k) in enumerate(shapes)]
+                # in-SSD aggregation: ONE gather, per-segment reductions
+                found = _multi_find(f, seg_rel, op, impl, use_sched)
+                reds = [red.reshape(n, r, F)
+                        for (red, _), (r, k) in zip(found, shapes)]
+                payload = reds[0] if len(reds) == 1 else jnp.concatenate(
+                    reds, axis=1)                        # (n, R_tot, F)
+                if op == "add":
+                    cnts = [cnt.reshape(n, r).astype(f.dtype)
+                            for (_, cnt), (r, k) in zip(found, shapes)]
+                    cnt = (cnts[0] if len(cnts) == 1 else
+                           jnp.concatenate(cnts, axis=1))
+                    # the counts ride the payload as one extra feature
+                    # column — compressed transmission stays ONE collective
+                    payload = jnp.concatenate([payload, cnt[..., None]],
+                                              axis=-1)
+                parts = lax.all_to_all(payload, AXIS, split_axis=0,
+                                       concat_axis=0, tiled=False)
+                outs, roff = [], 0
+                for r, k in shapes:
+                    seg = parts[:, roff:roff + r]
+                    roff += r
+                    outs.append(_combine_shards(seg[..., :F], seg[..., F],
+                                                op) if op == "add"
+                                else _combine_shards(seg, None, op))
+                return outs
+
+            # baseline: gather once, ship the raw (n, N, F) rows plus the
+            # ownership bits to the seed owners, reduce there ("the
+            # accelerator") — also through the GAS engine.
+            own = (rel >= 0) & (rel < part)
+            rows = gas.gas_gather(f, jnp.clip(rel, 0, part - 1).reshape(-1),
+                                  impl=impl).reshape(n, -1, F)
+            rows = jnp.where(own[..., None], rows, 0)
+            raw = lax.all_to_all(rows, AXIS, split_axis=0, concat_axis=0,
+                                 tiled=False)            # (n, N, F)
+            okk = lax.all_to_all(own[..., None], AXIS, split_axis=0,
+                                 concat_axis=0, tiled=False)[..., 0]
+            outs, off = [], 0
+            for r, k in shapes:
+                sl = slice(off, off + r * k)
+                off += r * k
+                # every source shard's k candidates line up per seed row:
+                # (r, n·k) — the destination-side reduce is a seed scatter
+                seg_rows = raw[:, sl].reshape(n, r, k, F).transpose(
+                    1, 0, 2, 3).reshape(r, n * k, F)
+                seg_ok = okk[:, sl].reshape(n, r, k).transpose(
+                    1, 0, 2).reshape(r, n * k)
+                red, cnt = _seed_reduce_rows(seg_rows, seg_ok, op, impl,
+                                             use_sched)
+                outs.append(_finalize(red, cnt, op))
+            return outs
+
+        if request_chunk is None:
+            outs = fetch(split_ids(ids_enc))
+        else:
+            # the chunked command queue respects segment boundaries: each
+            # segment streams separately (their K differ, so a chunk can
+            # never span two segments)
+            def one(nb_c, m_c):
+                return fetch([jnp.where(m_c, nb_c, -1)])[0]
+
+            outs = [scan_request_chunks(one, e, e >= 0, request_chunk)
+                    for e in split_ids(ids_enc)]
+        return tuple(o[None] for o in outs)
+
+    return shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS)),
+        out_specs=tuple(P(AXIS) for _ in blocks), check_vma=_check_vma(impl),
+    )(feats, enc)
+
+
 def aggregate_sampled(
     feats: jax.Array,     # (P, part, F) owner-sharded features
     nbrs: jax.Array,      # (P, B_loc, K) global neighbor ids, seed-sharded
@@ -439,85 +723,14 @@ def aggregate_sampled(
     collectives ``request_chunk`` seeds at a time; ``scheduled`` turns the
     per-shard reductions' idle-skip occupancy into the sort-free banded form
     (seed rows are destination-binned by construction).
+
+    This is the single-segment form of ``aggregate_multi`` — one code path,
+    so every coalesced mechanism (mask-encoded request broadcast, count
+    column riding the payload) serves the plain sampled entry too: one
+    ``all_gather`` + one ``all_to_all`` per request burst on the cgtrans
+    dataflow.
     """
-    if dataflow not in ("cgtrans", "baseline"):
-        raise ValueError(dataflow)
-    Pn, part, F = feats.shape
-    _, B_loc, K = nbrs.shape
-    use_sched = _resolve_scheduled(scheduled, impl)
-
-    if not is_sharded(mesh):
-        table = feats.reshape(Pn * part, F)
-
-        def body(nb_c, m_c):
-            red, cnt = _seed_reduce(table, nb_c, m_c, op, impl, use_sched)
-            return _finalize(red, cnt, op)
-
-        flat_nb = nbrs.reshape(Pn * B_loc, K)
-        flat_m = mask.reshape(Pn * B_loc, K)
-        if request_chunk is None:
-            out = body(flat_nb, flat_m)
-        else:
-            out = scan_request_chunks(body, flat_nb, flat_m, request_chunk)
-        return out.reshape(Pn, B_loc, F)
-
-    n = mesh.shape[AXIS]
-
-    def shard_fn(f, nb, m):
-        f, nb, m = f[0], nb[0], m[0]
-        lo = lax.axis_index(AXIS) * part
-
-        def body(nb_c, m_c):
-            # request broadcast (ids only — tiny; "addresses into the SSD")
-            C = nb_c.shape[0]
-            ids = lax.all_gather(nb_c, AXIS)                 # (n, C, K)
-            msk = lax.all_gather(m_c, AXIS)
-            rel = ids - lo
-            own = msk & (rel >= 0) & (rel < part)
-            relc = jnp.clip(rel, 0, part - 1)
-
-            if dataflow == "cgtrans":
-                # in-SSD aggregation: GAS-reduce per seed, ship (n·C, F)
-                red, cnt = _seed_reduce(
-                    f, relc.reshape(n * C, K), own.reshape(n * C, K), op,
-                    impl, use_sched)
-                parts = lax.all_to_all(red.reshape(n, C, F), AXIS,
-                                       split_axis=0, concat_axis=0, tiled=False)
-                if op == "add":
-                    cnts = lax.all_to_all(
-                        cnt.reshape(n, C)[..., None].astype(f.dtype), AXIS,
-                        split_axis=0, concat_axis=0, tiled=False)[..., 0]
-                else:
-                    cnts = None
-                return _combine_shards(parts, cnts, op)
-
-            # baseline: ship raw (n·C·K, F) neighbor rows to the seed owners,
-            # reduce there ("the accelerator") — also through the GAS engine.
-            rows = gas.gas_gather(f, relc.reshape(-1), impl=impl
-                                  ).reshape(n, C, K, F)
-            rows = jnp.where(own[..., None], rows, 0)
-            raw = lax.all_to_all(rows, AXIS, split_axis=0, concat_axis=0,
-                                 tiled=False)                 # (n, C, K, F)
-            okk = lax.all_to_all(own[..., None], AXIS, split_axis=0,
-                                 concat_axis=0, tiled=False)[..., 0]
-            flat = raw.transpose(1, 0, 2, 3).reshape(C * n * K, F)
-            okf = okk.transpose(1, 0, 2).reshape(C * n * K)
-            seed = jnp.repeat(jnp.arange(C, dtype=jnp.int32), n * K)
-            sched = (gas.schedule_edges(seed, okf, C, assume_sorted=True)
-                     if use_sched else None)
-            red = gas.gas_scatter_weighted(
-                seed, flat, jnp.ones((C * n * K,), jnp.float32), okf, C,
-                op=op, impl=impl, schedule=sched)
-            return _finalize(red, okf.reshape(C, n * K).sum(-1), op)
-
-        if request_chunk is None:
-            out = body(nb, m)
-        else:
-            out = scan_request_chunks(body, nb, m, request_chunk)
-        return out[None]
-
-    return shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(P(AXIS), P(AXIS), P(AXIS)),
-        out_specs=P(AXIS), check_vma=_check_vma(impl),
-    )(feats, nbrs, mask)
+    out, = aggregate_multi(feats, ((nbrs, mask),), mesh=mesh,
+                           dataflow=dataflow, op=op, impl=impl,
+                           request_chunk=request_chunk, scheduled=scheduled)
+    return out

@@ -75,6 +75,30 @@ _INIT = {
 }
 
 
+def _tick(kind: str) -> None:
+    """Tick the shared trace-time dispatch counter (see ``count_dispatches``)."""
+    from repro.kernels.gas_scatter import ops as gas_ops
+    gas_ops._tick(kind)
+
+
+def count_dispatches():
+    """Context manager counting GAS dispatches at trace time — the
+    deterministic "how many engine calls does this program issue" view.
+
+    Engine-level keys ticked from this module: ``find`` (one per
+    ``gas_gather`` — the find of find-and-compute, both backends) and
+    ``reduce`` (one per weighted scatter reduction, both backends; the K=1
+    pure-find specialization never reduces, so it never ticks). The kernel
+    layer (``repro.kernels.gas_scatter.ops``) ticks ``kernel_scatter`` into
+    the same counter for every actual pallas dispatch. This is what the
+    request-coalescing tier asserts on: the coalesced ``sage_forward`` fetch
+    runs ONE ``find`` (and its VJP one backward ``kernel_scatter``) where
+    the separate two-stream form ran two.
+    """
+    from repro.kernels.gas_scatter import ops as gas_ops
+    return gas_ops.count_dispatches()
+
+
 def _segment_reduce_xla(dst: jax.Array, values: jax.Array, n_rows: int, op: Op):
     if op == "add":
         return jax.ops.segment_sum(values, dst, num_segments=n_rows)
@@ -167,6 +191,7 @@ def gas_gather(table: jax.Array, ids: jax.Array, *, impl: str = "xla") -> jax.Ar
     scatter-add (the backward of a gather IS a scatter) through the FAST-GAS
     kernel, so the reverse pass of a dataflow stays in the in-SSD regime.
     """
+    _tick("find")
     if impl == "pallas":
         if table.ndim != 2:
             # a silent jnp.take fallback here would hand the backward to an
@@ -199,6 +224,7 @@ def _scatter_weighted_impl(dst, src_vals, weights, mask, n_rows, op: Op,
     """The primal computation shared by both backends (see the public
     ``gas_scatter_weighted`` for semantics). ``schedule`` is the banded
     idle-skip bounds for pre-permuted inputs (pallas backend only)."""
+    _tick("reduce")
     if impl == "pallas":
         # fused dispatch: mask → dead-row convention, weights → match-line
         # scaling, both INSIDE the kernel — no E×F staging array exists.

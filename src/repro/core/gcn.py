@@ -40,6 +40,12 @@ class GCNConfig:
     scheduled: Optional[bool] = None     # destination-binned edge schedule
                                          # (idle-skip locality pass); None →
                                          # on exactly when impl="pallas"
+    coalesce: bool = True                # fuse sage_forward's self-row
+                                         # lookup + 2-hop aggregation into
+                                         # ONE SSD command block (one
+                                         # all_gather/all_to_all/kernel
+                                         # gather/backward scatter); False
+                                         # = the legacy two-body form
 
 
 def gcn_schema(cfg: GCNConfig) -> Dict[str, Any]:
@@ -130,6 +136,13 @@ def sage_forward(params, feats, batch, cfg: GCNConfig, *,
       mask2 (P, B·(1+K1), K2)
 
     Returns (P, B, C) logits.
+
+    With ``cfg.coalesce`` (the default) the distributed step issues ONE
+    coalesced SSD command block (``cgtrans.aggregate_multi``): the self-row
+    lookups and the 2-hop requests share a single request broadcast, kernel
+    gather, result all_to_all and backward cotangent scatter —
+    collectives-per-step 2 → 1 vs the two-body form, bit-exact both ways
+    (``tests/test_cgtrans_coalesce.py``).
     """
     Pn, B = batch["seeds"].shape
     K1 = batch["nbrs1"].shape[-1]
@@ -138,13 +151,27 @@ def sage_forward(params, feats, batch, cfg: GCNConfig, *,
     flat1 = ids1.reshape(Pn, B * (1 + K1))
 
     # distributed step: fetch self features + aggregate 2-hop neighborhoods.
-    x_self = lookup_rows(feats, flat1, mesh=mesh, dataflow=cfg.dataflow,
-                         impl=cfg.impl, request_chunk=cfg.request_chunk,
-                         scheduled=cfg.scheduled)
-    x_agg = cgtrans.aggregate_sampled(
-        feats, batch["nbrs2"], batch["mask2"], mesh=mesh,
-        dataflow=cfg.dataflow, impl=cfg.impl, request_chunk=cfg.request_chunk,
-        scheduled=cfg.scheduled)
+    if cfg.coalesce:
+        # ONE SSD command block: the self-row lookups (a K=1 pure-find
+        # segment) and the 2-hop sample requests concatenate into a single
+        # (ids ‖ segment-descriptor) block — one request broadcast, one
+        # kernel gather, one compressed result shipment, and (under
+        # impl="pallas") one backward cotangent scatter, where the
+        # two-body form below issues two of each.
+        x_self, x_agg = cgtrans.aggregate_multi(
+            feats,
+            ((flat1[..., None], jnp.ones(flat1.shape + (1,), bool)),
+             (batch["nbrs2"], batch["mask2"])),
+            mesh=mesh, dataflow=cfg.dataflow, impl=cfg.impl,
+            request_chunk=cfg.request_chunk, scheduled=cfg.scheduled)
+    else:
+        x_self = lookup_rows(feats, flat1, mesh=mesh, dataflow=cfg.dataflow,
+                             impl=cfg.impl, request_chunk=cfg.request_chunk,
+                             scheduled=cfg.scheduled)
+        x_agg = cgtrans.aggregate_sampled(
+            feats, batch["nbrs2"], batch["mask2"], mesh=mesh,
+            dataflow=cfg.dataflow, impl=cfg.impl,
+            request_chunk=cfg.request_chunk, scheduled=cfg.scheduled)
 
     h1 = jnp.concatenate([x_self, x_agg], axis=-1)
     h1 = jax.nn.relu(jnp.einsum("pbf,fh->pbh", h1, params["w0"]) + params["b0"])

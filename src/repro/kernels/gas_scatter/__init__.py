@@ -1,12 +1,13 @@
 from repro.kernels.gas_scatter import ops, ref
-from repro.kernels.gas_scatter.ops import (EdgeSchedule, dense_skip_stats,
+from repro.kernels.gas_scatter.ops import (EdgeSchedule, count_dispatches,
+                                           dense_skip_stats,
                                            gas_scatter, gas_scatter_fused,
                                            occupancy_map, schedule_edges,
                                            schedule_skip_stats)
 from repro.kernels.gas_scatter.ref import (gas_scatter_ref,
                                            gas_scatter_weighted_ref)
 
-__all__ = ["EdgeSchedule", "dense_skip_stats", "ops", "ref", "gas_scatter",
-           "gas_scatter_fused",
+__all__ = ["EdgeSchedule", "count_dispatches", "dense_skip_stats", "ops",
+           "ref", "gas_scatter", "gas_scatter_fused",
            "gas_scatter_ref", "gas_scatter_weighted_ref", "occupancy_map",
            "schedule_edges", "schedule_skip_stats"]

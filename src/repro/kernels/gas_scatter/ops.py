@@ -18,7 +18,9 @@ Three layers:
 
 from __future__ import annotations
 
+import contextlib
 import functools
+from collections import Counter
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -26,6 +28,49 @@ import jax.numpy as jnp
 
 from repro.kernels.gas_scatter import kernel as K
 from repro.kernels.gas_scatter.ref import gas_scatter_ref
+
+
+# ---------------------------------------------------------------------------
+# dispatch counting (the deterministic "how many kernel calls" view)
+# ---------------------------------------------------------------------------
+
+_DISPATCH_COUNTS: Optional[Counter] = None
+
+
+@contextlib.contextmanager
+def count_dispatches():
+    """Count GAS dispatches at TRACE time while the context is active.
+
+    The public wrappers below tick a shared counter from plain (un-jit'd)
+    Python before entering their jitted bodies, so every *dispatch site* is
+    counted exactly once per trace — immune to jit caching of the inner
+    functions and to XLA's combiner/DCE passes. Trace the program under
+    test inside the context (``jax.make_jaxpr(fn)(*args)``, or an eager
+    call) and read the Counter:
+
+        with count_dispatches() as counts:
+            jax.make_jaxpr(jax.grad(loss))(x)
+        assert counts["kernel_scatter"] == 1
+
+    Keys ticked here: ``kernel_scatter`` (one per pallas scatter dispatch —
+    plain or fused). ``repro.core.gas`` ticks the engine-level keys
+    ``find`` (table gathers) and ``reduce`` (weighted scatter reductions,
+    either backend) into the same counter. Like jaxpr counting, a scan body
+    counts once, not once per iteration. Contexts nest: the innermost
+    counter receives the ticks.
+    """
+    global _DISPATCH_COUNTS
+    prev = _DISPATCH_COUNTS
+    _DISPATCH_COUNTS = Counter()
+    try:
+        yield _DISPATCH_COUNTS
+    finally:
+        _DISPATCH_COUNTS = prev
+
+
+def _tick(kind: str) -> None:
+    if _DISPATCH_COUNTS is not None:
+        _DISPATCH_COUNTS[kind] += 1
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int, fill):
@@ -219,13 +264,22 @@ def occupancy_map(dst: jax.Array, n_row_blocks: int, edge_tile: int) -> jax.Arra
 # dispatch wrappers
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("n_rows", "op", "interpret"))
 def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
                 op: str = "add", interpret: bool | None = None) -> jax.Array:
     """Scatter-reduce ``values`` (E, F) into (n_rows, F) by ``dst`` (E,).
 
     Matches ``ref.gas_scatter_ref`` exactly (out-of-range dst ignored).
+    One public call = one kernel dispatch (the or/1-D rewrites happen
+    inside), ticked into ``count_dispatches``.
     """
+    _tick("kernel_scatter")
+    return _gas_scatter_jit(dst, values, n_rows, op=op, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "op", "interpret"))
+def _gas_scatter_jit(dst: jax.Array, values: jax.Array, n_rows: int, *,
+                     op: str = "add",
+                     interpret: bool | None = None) -> jax.Array:
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if op == "or":
@@ -234,12 +288,12 @@ def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
         # dispatch: rewriting after the 1-D recursion re-entered the public
         # wrapper with op="or" still set, sending 1-D int values through the
         # float32 max round-trip at both recursion depths.
-        out = gas_scatter(dst, values.astype(jnp.float32), n_rows, op="max",
-                          interpret=interpret)
+        out = _gas_scatter_jit(dst, values.astype(jnp.float32), n_rows,
+                               op="max", interpret=interpret)
         return jnp.maximum(out, 0).astype(values.dtype)
     if values.ndim == 1:
-        return gas_scatter(dst, values[:, None], n_rows, op=op,
-                           interpret=interpret)[:, 0]
+        return _gas_scatter_jit(dst, values[:, None], n_rows, op=op,
+                                interpret=interpret)[:, 0]
 
     E, F = values.shape
     et = K.edge_tile(op, interpret)
@@ -259,7 +313,6 @@ def gas_scatter(dst: jax.Array, values: jax.Array, n_rows: int, *,
     return out[:n_rows, :F]
 
 
-@functools.partial(jax.jit, static_argnames=("n_rows", "op", "interpret"))
 def gas_scatter_fused(dst: jax.Array, values: jax.Array,
                       weights: Optional[jax.Array], mask: Optional[jax.Array],
                       n_rows: int, *, op: str = "add", schedule=None,
@@ -281,14 +334,28 @@ def gas_scatter_fused(dst: jax.Array, values: jax.Array,
     ``dst``/``values``/``weights``/``mask`` are already in ``schedule.perm``
     order — this wrapper never permutes (the dataflow permutes the edge
     LIST once, so gathered values arrive binned for free).
+
+    One public call = one kernel dispatch, ticked into
+    ``count_dispatches``.
     """
+    _tick("kernel_scatter")
+    return _gas_scatter_fused_jit(dst, values, weights, mask, n_rows, op=op,
+                                  schedule=schedule, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "op", "interpret"))
+def _gas_scatter_fused_jit(dst: jax.Array, values: jax.Array,
+                           weights: Optional[jax.Array],
+                           mask: Optional[jax.Array],
+                           n_rows: int, *, op: str = "add", schedule=None,
+                           interpret: bool | None = None) -> jax.Array:
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     assert op in ("add", "max", "min"), op
     if values.ndim == 1:
-        return gas_scatter_fused(dst, values[:, None], weights, mask, n_rows,
-                                 op=op, schedule=schedule,
-                                 interpret=interpret)[:, 0]
+        return _gas_scatter_fused_jit(dst, values[:, None], weights, mask,
+                                      n_rows, op=op, schedule=schedule,
+                                      interpret=interpret)[:, 0]
 
     E, F = values.shape
     et = K.edge_tile(op, interpret)
@@ -322,6 +389,6 @@ def gas_scatter_fused(dst: jax.Array, values: jax.Array,
     return out[:n_rows, :F]
 
 
-__all__ = ["EdgeSchedule", "dense_skip_stats", "gas_scatter",
-           "gas_scatter_fused", "gas_scatter_ref", "occupancy_map",
-           "schedule_edges", "schedule_skip_stats"]
+__all__ = ["EdgeSchedule", "count_dispatches", "dense_skip_stats",
+           "gas_scatter", "gas_scatter_fused", "gas_scatter_ref",
+           "occupancy_map", "schedule_edges", "schedule_skip_stats"]

@@ -1,0 +1,94 @@
+"""Deterministic primitive counters over traced jaxprs.
+
+``hlo_analysis`` measures what XLA *compiled* (bytes, FLOPs) — but compiled
+HLO is downstream of optimization passes (collective combiners, DCE,
+fusion), so "how many collectives does this dataflow ISSUE?" is better
+answered one level up, on the jaxpr the program traces to. This module
+counts primitive equations recursively through every sub-jaxpr (``pjit``,
+``shard_map``, ``scan``/``while`` bodies, ``custom_vjp`` branches, …), which
+makes the counts
+
+* **deterministic** — a pure function of the traced program, independent of
+  backend, optimization level, or combiner passes;
+* **complete** — a collective inside a ``shard_map`` body or a kernel
+  dispatch inside a custom-VJP backward is counted exactly like a top-level
+  one.
+
+Counts are *static dispatch sites*: a ``lax.scan`` body is counted once, not
+once per iteration (the chunked request stream issues its collectives per
+chunk at run time but traces them once — exactly the "command block" view
+the coalescing work optimizes).
+
+Used by ``tests/test_cgtrans_coalesce.py`` and
+``benchmarks/collective_bytes.py`` to assert the request-coalescing claim:
+the coalesced sampled dataflow issues ONE ``all_to_all`` + ONE ``all_gather``
+(+ one kernel gather) where the separate two-stream form issued two of each.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import Iterable, Optional
+
+import jax
+
+#: the cross-shard communication primitives of the CGTrans dataflows
+COLLECTIVE_PRIMITIVES = (
+    "all_to_all", "all_gather", "psum", "psum_scatter", "reduce_scatter",
+    "ppermute", "pmax", "pmin",
+)
+
+
+def _sub_jaxprs(value):
+    """Yield every jaxpr reachable from one eqn-param value (duck-typed so
+    it works across JAX versions that moved ``Jaxpr``/``ClosedJaxpr``)."""
+    if hasattr(value, "eqns"):                       # a raw Jaxpr
+        yield value
+    elif hasattr(value, "jaxpr") and hasattr(value.jaxpr, "eqns"):
+        yield value.jaxpr                            # a ClosedJaxpr
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+    elif isinstance(value, dict):
+        for v in value.values():
+            yield from _sub_jaxprs(v)
+
+
+def count_primitives(jaxpr) -> Counter:
+    """Counter of primitive-name → static occurrence count, recursing into
+    every sub-jaxpr. Accepts a ``Jaxpr`` or ``ClosedJaxpr``."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    counts: Counter = Counter()
+    stack = [jaxpr]
+    seen = set()
+    while stack:
+        j = stack.pop()
+        if id(j) in seen:       # pjit caches share jaxpr objects — count once
+            continue
+        seen.add(id(j))
+        for eqn in j.eqns:
+            counts[eqn.primitive.name] += 1
+            for v in eqn.params.values():
+                stack.extend(_sub_jaxprs(v))
+    return counts
+
+
+def primitive_counts(fn, *args, keys: Optional[Iterable[str]] = None,
+                     **kwargs) -> Counter:
+    """Trace ``fn(*args, **kwargs)`` and count its primitives.
+
+    ``keys`` restricts the result (missing keys read 0 from the Counter
+    anyway; restricting just keeps reports small). The trace is exactly what
+    ``jax.jit`` would stage, so the counts describe the program XLA receives
+    — before any combiner/DCE pass can blur the picture.
+    """
+    counts = count_primitives(jax.make_jaxpr(fn)(*args, **kwargs))
+    if keys is not None:
+        return Counter({k: counts[k] for k in keys})
+    return counts
+
+
+def collective_counts(fn, *args, **kwargs) -> Counter:
+    """``primitive_counts`` restricted to the cross-shard collectives."""
+    return primitive_counts(fn, *args, keys=COLLECTIVE_PRIMITIVES, **kwargs)

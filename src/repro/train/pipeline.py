@@ -17,9 +17,12 @@ Two entry points:
   feature table. This is where the FAST-GAS deployment knobs surface into
   training: ``cfg.impl`` (GAS backend for every per-shard aggregation),
   ``cfg.request_chunk`` (SSD command-queue depth for the sampled request
-  stream) and ``cfg.scheduled`` (the destination-binned locality pass that
+  stream), ``cfg.scheduled`` (the destination-binned locality pass that
   turns the kernel's idle-skip occupancy into a thin band; defaults on
-  exactly when ``impl="pallas"``) ride in on the ``GCNConfig`` — all
+  exactly when ``impl="pallas"``) and ``cfg.coalesce`` (the self-lookup +
+  2-hop requests fused into ONE SSD command block — one all_to_all, one
+  kernel gather, one backward cotangent scatter per step; on by default)
+  ride in on the ``GCNConfig`` — all
   callers (``examples/train_graphsage.py``, the distributed test cases)
   build their step through here instead of hand-rolling the grad/update
   composition. The schedule serves forward AND backward: it is carried as a

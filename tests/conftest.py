@@ -22,6 +22,16 @@ def pallas_parity_report():
 
 
 @pytest.fixture(scope="session")
+def coalesce_parity_report():
+    """The coalesced-request matrix on the real 8-way mesh (aggregate_multi
+    ≡ separate aggregate_sampled calls over dataflow × impl × chunked ×
+    scheduled, plus the deterministic collectives-per-step 2 → 1 count and
+    the sage_forward coalesce-flag parity) — run ONCE per session;
+    test_cgtrans_coalesce.py asserts each cell against this shared stdout."""
+    return run_distributed_case("cgtrans_coalesce_parity", timeout=900)
+
+
+@pytest.fixture(scope="session")
 def grad_parity_report():
     """The GRADIENT differential matrix on the real 8-way mesh (plus the
     3-step pallas-vs-xla train parity) — run ONCE per session (each cell is

@@ -175,6 +175,128 @@ def case_cgtrans_pallas_parity():
     print("cgtrans pallas parity ok")
 
 
+def case_cgtrans_coalesce_parity():
+    """The coalesced-request matrix on a REAL 8-way mesh: for every
+    (dataflow, impl, chunked, scheduled) cell, ``aggregate_multi`` over a
+    sage-shaped request pair (a K=1 all-valid lookup segment + a masked
+    fan-out segment) ≡ the two separate ``aggregate_sampled`` calls — with
+    one all-masked seed shard, gradients, the deterministic
+    collectives-per-step 2 → 1 assertion (jaxpr-level, immune to XLA
+    combiner passes), and a ``sage_forward`` coalesce-flag parity twin.
+
+    Prints one ``coalesce … ok`` line per cell;
+    tests/test_cgtrans_coalesce.py parses them into per-cell test results.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import cgtrans
+    from repro.graph import partition_by_src, uniform_graph, host_sample
+    from repro.launch.jaxpr_stats import collective_counts
+    from repro.launch.mesh import make_data_mesh
+
+    mesh = make_data_mesh(8)
+    rng = np.random.default_rng(0)
+    g = uniform_graph(256, 1000, seed=1, n_features=16, weights=True)
+    pg = partition_by_src(g, 8)
+    feats = jnp.asarray(pg.features)
+
+    seeds = rng.integers(0, 256, 64).astype(np.int32)
+    nbrs, smask = host_sample(g, seeds, 10, seed=2)
+    nb2 = jnp.asarray(nbrs.reshape(8, 8, 10))
+    mk2 = np.asarray(smask.reshape(8, 8, 10)).copy()
+    mk2[5] = False                                         # all-masked shard
+    mk2 = jnp.asarray(mk2)
+    nb1 = jnp.asarray(rng.integers(0, 256, (8, 6, 1)).astype(np.int32))
+    mk1 = jnp.ones((8, 6, 1), bool)
+    b1, b2 = (nb1, mk1), (nb2, mk2)
+
+    def close(a, b, tag, tol=1e-3):
+        err = float(jnp.max(jnp.abs(a - b)))
+        assert err < tol, (tag, err)
+
+    ref1 = cgtrans.aggregate_sampled(feats, nb1, mk1, mesh=None)
+    ref2 = cgtrans.aggregate_sampled(feats, nb2, mk2, mesh=None)
+    for flow in ("cgtrans", "baseline"):
+        for impl in ("xla", "pallas"):
+            for chunk in (None, 3):
+                o1, o2 = jax.jit(lambda f, fl=flow, i=impl, c=chunk:
+                                 cgtrans.aggregate_multi(
+                                     f, (b1, b2), mesh=mesh, dataflow=fl,
+                                     impl=i, request_chunk=c))(feats)
+                close(o1, ref1, ("coalesce seg1", flow, impl, chunk))
+                close(o2, ref2, ("coalesce seg2", flow, impl, chunk))
+                tag = "on" if chunk else "off"
+                print(f"coalesce flow={flow} impl={impl} chunked={tag} ok")
+        # the scheduled axis (pallas defaults to scheduled on the mesh —
+        # the cells above run it; pin scheduled=off explicitly too)
+        for sched in (False, True):
+            o1, o2 = jax.jit(lambda f, fl=flow, s=sched:
+                             cgtrans.aggregate_multi(
+                                 f, (b1, b2), mesh=mesh, dataflow=fl,
+                                 impl="pallas", scheduled=s))(feats)
+            close(o1, ref1, ("coalesce-sched seg1", flow, sched))
+            close(o2, ref2, ("coalesce-sched seg2", flow, sched))
+            print(f"coalesce flow={flow} impl=pallas "
+                  f"sched={'on' if sched else 'off'} ok")
+
+    # gradients: d_feats through the coalesced block ≡ the separate calls
+    u1 = jnp.asarray(rng.standard_normal((8, 6, 16)).astype(np.float32))
+    u2 = jnp.asarray(rng.standard_normal((8, 8, 16)).astype(np.float32))
+    ref_g = jax.grad(lambda f: jnp.sum(
+        cgtrans.aggregate_sampled(f, nb1, mk1, mesh=None) * u1) + jnp.sum(
+        cgtrans.aggregate_sampled(f, nb2, mk2, mesh=None) * u2))(feats)
+    for flow in ("cgtrans", "baseline"):
+        for impl in ("xla", "pallas"):
+            gc = jax.jit(jax.grad(
+                lambda f, fl=flow, i=impl: (lambda a, b:
+                                            jnp.sum(a * u1) + jnp.sum(b * u2))(
+                    *cgtrans.aggregate_multi(f, (b1, b2), mesh=mesh,
+                                             dataflow=fl, impl=i))))(feats)
+            close(gc, ref_g, ("coalesce grad", flow, impl))
+        print(f"coalesce grads flow={flow} ok")
+
+    # the headline, counted deterministically at the jaxpr level:
+    # collectives-per-step 2 → 1 on the cgtrans dataflow, halved on baseline
+    def sep(f, fl):
+        return (cgtrans.aggregate_sampled(f, nb1, mk1, mesh=mesh, dataflow=fl),
+                cgtrans.aggregate_sampled(f, nb2, mk2, mesh=mesh, dataflow=fl))
+
+    def coa(f, fl):
+        return cgtrans.aggregate_multi(f, (b1, b2), mesh=mesh, dataflow=fl)
+
+    cs = collective_counts(lambda f: sep(f, "cgtrans"), feats)
+    cc = collective_counts(lambda f: coa(f, "cgtrans"), feats)
+    assert cs["all_to_all"] == 2 and cs["all_gather"] == 2, dict(cs)
+    assert cc["all_to_all"] == 1 and cc["all_gather"] == 1, dict(cc)
+    print("coalesce collectives cgtrans separate=2 coalesced=1 ok")
+    bs = collective_counts(lambda f: sep(f, "baseline"), feats)
+    bc = collective_counts(lambda f: coa(f, "baseline"), feats)
+    assert bc["all_to_all"] * 2 == bs["all_to_all"], (dict(bs), dict(bc))
+    assert bc["all_gather"] * 2 == bs["all_gather"], (dict(bs), dict(bc))
+    print("coalesce collectives baseline halved ok")
+
+    # sage_forward on the mesh: coalesce=True ≡ coalesce=False end to end
+    from repro.common.schema import init_params
+    from repro.core.gcn import GCNConfig, gcn_schema, sage_forward
+    batch = {
+        "seeds": jnp.asarray(rng.integers(0, 256, (8, 4)).astype(np.int32)),
+        "nbrs1": jnp.asarray(rng.integers(0, 256, (8, 4, 3)).astype(np.int32)),
+        "mask1": jnp.asarray(rng.random((8, 4, 3)) < 0.8),
+        "nbrs2": jnp.asarray(rng.integers(0, 256, (8, 16, 5)).astype(np.int32)),
+        "mask2": jnp.asarray(rng.random((8, 16, 5)) < 0.8),
+    }
+    logits = {}
+    for coalesce in (True, False):
+        cfg = GCNConfig(n_features=16, hidden=8, n_classes=4, fanout=5,
+                        coalesce=coalesce)
+        params = init_params(gcn_schema(cfg), jax.random.PRNGKey(0))
+        logits[coalesce] = jax.jit(lambda p, f, c=cfg: sage_forward(
+            p, f, batch, c, mesh=mesh))(params, feats)
+    close(logits[True], logits[False], ("sage coalesce parity",), tol=1e-5)
+    print("coalesce sage-forward mesh parity ok")
+    print("cgtrans coalesce parity ok")
+
+
 def case_cgtrans_grad_parity():
     """The gradient matrix on a REAL 8-way mesh: for every (dataflow, op,
     path), ``jax.grad`` through impl="pallas" ≡ impl="xla" ≡ the

@@ -1,0 +1,344 @@
+"""Coalesced-request tier: one SSD command block ≡ two separate streams.
+
+``cgtrans.aggregate_multi`` concatenates several sampled request segments
+(e.g. ``sage_forward``'s K=1 self-row lookup + its 2-hop aggregation) into
+ONE command block: one request broadcast, one kernel gather, one compressed
+result shipment, one backward cotangent scatter. Four layers of guarantees:
+
+1. **In-process equivalence matrix** — coalesced ≡ separate BIT-exact
+   (values AND gradients, on integer-valued data where float addition is
+   associative, so any dropped/duplicated/reordered contribution is a hard
+   mismatch; the gradient cells additionally pin power-of-two fan-in so the
+   mean shares ``u/cnt`` stay dyadic — the combined backward scatter may
+   legally re-associate the sum, which must not cost a ulp) over
+   dataflow × impl × {chunked, unchunked} × {scheduled on, off} on the
+   single-shard reference path — plus ``sage_forward(coalesce=True)`` ≡
+   ``coalesce=False`` end to end.
+2. **Segment-descriptor invariants** (``_propcheck``) — offsets are exact
+   prefix sums, split∘concat is the identity for arbitrary segment shapes,
+   and chunk boundaries can never span a segment.
+3. **Deterministic dispatch counters** — ``gas.count_dispatches`` (trace
+   time, immune to jit caching and XLA passes): the coalesced fetch issues
+   ONE ``find`` where the separate form issues two, and its VJP issues ONE
+   backward kernel scatter where the separate form issues two. The
+   collective count (all_gather/all_to_all: 2 → 1 on the sharded cgtrans
+   dataflow) is asserted the same way inside the 8-way subprocess case.
+4. **On-mesh matrix** (``distributed`` marker) — the
+   dataflow × impl × {chunked, unchunked} × {scheduled on, off} grid on a
+   REAL 8-way ``shard_map`` mesh via one shared subprocess run
+   (``case_cgtrans_coalesce_parity``); each cell asserted as its own test.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.core import cgtrans, gas
+
+FLOWS = ("cgtrans", "baseline")
+OPS = ("add", "max", "min", "or")
+
+
+def _int_feats(rng, p, part, f, op):
+    """Integer-valued float features — addition is associative, so
+    coalesced ≡ separate can be asserted bit-for-bit."""
+    x = rng.integers(-4, 5, (p, part, f)).astype(np.float32)
+    if op == "or":
+        return jnp.asarray((x > 0).astype(np.int32))
+    return jnp.asarray(x)
+
+
+def _two_blocks(rng, p, v, b, k1, k2):
+    """A sage-shaped request pair: a K=1 all-valid lookup segment + a
+    masked fan-out segment."""
+    nb1 = jnp.asarray(rng.integers(0, v, (p, b, k1)).astype(np.int32))
+    mk1 = jnp.ones((p, b, k1), bool)
+    nb2 = jnp.asarray(rng.integers(0, v, (p, b + 3, k2)).astype(np.int32))
+    mk2 = jnp.asarray(rng.random((p, b + 3, k2)) < 0.8)
+    return (nb1, mk1), (nb2, mk2)
+
+
+# ---------------------------------------------------------------------------
+# 1. coalesced ≡ separate, bit-exact, values and gradients
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduled", [False, True])
+@pytest.mark.parametrize("chunk", [None, 3])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("op", OPS)
+def test_coalesced_equals_separate_bitexact(rng, op, impl, chunk, scheduled):
+    P_, part, F = 2, 32, 8
+    feats = _int_feats(rng, P_, part, F, op)
+    b1, b2 = _two_blocks(rng, P_, P_ * part, 7, 1, 6)
+    kw = dict(mesh=None, op=op, impl=impl, request_chunk=chunk,
+              scheduled=scheduled)
+    sep = [cgtrans.aggregate_sampled(feats, nb, mk, **kw)
+           for nb, mk in (b1, b2)]
+    coa = cgtrans.aggregate_multi(feats, (b1, b2), **kw)
+    for i, (s, c) in enumerate(zip(sep, coa)):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(s),
+                                      err_msg=f"segment {i} diverged")
+
+
+@pytest.mark.parametrize("chunk", [None, 3])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_coalesced_grads_bitexact(rng, impl, chunk):
+    """d_feats through the coalesced block ≡ through the separate calls,
+    bit-for-bit: integer cotangents and power-of-two valid counts per seed,
+    so every mean share ``u/cnt`` is dyadic and summation order (the one
+    thing coalescing changes in the backward scatter) cannot shift a ulp."""
+    P_, part, F = 2, 16, 4
+    feats = _int_feats(rng, P_, part, F, "add")
+    nb1 = jnp.asarray(rng.integers(0, P_ * part, (P_, 5, 1)).astype(np.int32))
+    mk1 = jnp.ones((P_, 5, 1), bool)
+    nb2 = jnp.asarray(rng.integers(0, P_ * part, (P_, 8, 4)).astype(np.int32))
+    cnt = 2 ** rng.integers(0, 3, (P_, 8))          # 1, 2 or 4 valid samples
+    mk2 = jnp.asarray(np.arange(4)[None, None, :] < cnt[..., None])
+    b1, b2 = (nb1, mk1), (nb2, mk2)
+    u1 = jnp.asarray(rng.integers(-3, 4, (P_, 5, F)).astype(np.float32))
+    u2 = jnp.asarray(rng.integers(-3, 4, (P_, 8, F)).astype(np.float32))
+    kw = dict(mesh=None, impl=impl, request_chunk=chunk)
+
+    def loss_sep(f):
+        a = cgtrans.aggregate_sampled(f, *b1, **kw)
+        b = cgtrans.aggregate_sampled(f, *b2, **kw)
+        return jnp.sum(a * u1) + jnp.sum(b * u2)
+
+    def loss_coa(f):
+        a, b = cgtrans.aggregate_multi(f, (b1, b2), **kw)
+        return jnp.sum(a * u1) + jnp.sum(b * u2)
+
+    gs = jax.grad(loss_sep)(feats)
+    gc = jax.grad(loss_coa)(feats)
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(gs))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_sage_forward_coalesce_flag_bitexact(rng, impl):
+    """The deployment path: sage_forward(coalesce=True) ≡ the legacy
+    two-body form, logits AND parameter gradients."""
+    from repro.common.schema import init_params
+    from repro.core.gcn import GCNConfig, gcn_schema, sage_forward
+
+    P_, B, K1, K2, V, F = 2, 4, 3, 5, 64, 8
+    feats = _int_feats(rng, P_, V // P_, F, "add")
+    batch = {
+        "seeds": jnp.asarray(rng.integers(0, V, (P_, B)).astype(np.int32)),
+        "nbrs1": jnp.asarray(rng.integers(0, V, (P_, B, K1)).astype(np.int32)),
+        "mask1": jnp.asarray(rng.random((P_, B, K1)) < 0.8),
+        "nbrs2": jnp.asarray(
+            rng.integers(0, V, (P_, B * (1 + K1), K2)).astype(np.int32)),
+        "mask2": jnp.asarray(rng.random((P_, B * (1 + K1), K2)) < 0.8),
+    }
+    outs, grads = {}, {}
+    for coalesce in (True, False):
+        cfg = GCNConfig(n_features=F, hidden=8, n_classes=4, fanout=K2,
+                        impl=impl, coalesce=coalesce)
+        params = init_params(gcn_schema(cfg), jax.random.PRNGKey(0))
+        outs[coalesce] = sage_forward(params, feats, batch, cfg, mesh=None)
+        grads[coalesce] = jax.grad(
+            lambda p: jnp.sum(sage_forward(p, feats, batch, cfg, mesh=None)
+                              ** 2))(params)
+    np.testing.assert_array_equal(np.asarray(outs[True]),
+                                  np.asarray(outs[False]))
+    for (ka, ga), (kb, gb) in zip(sorted(grads[True].items()),
+                                  sorted(grads[False].items())):
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                                   atol=1e-6, rtol=1e-6,
+                                   err_msg=f"param {ka} grad diverged")
+
+
+def test_multi_all_masked(rng):
+    """A fully-masked segment must not contaminate its neighbors: segment 0
+    reads 0 everywhere, segment 1 is unaffected."""
+    P_, part, F = 2, 16, 4
+    feats = jnp.asarray(rng.standard_normal((P_, part, F)).astype(np.float32))
+    nb1 = jnp.asarray(rng.integers(0, P_ * part, (P_, 5, 3)).astype(np.int32))
+    mk1 = jnp.zeros((P_, 5, 3), bool)
+    nb2 = jnp.asarray(rng.integers(0, P_ * part, (P_, 4, 2)).astype(np.int32))
+    mk2 = jnp.ones((P_, 4, 2), bool)
+    for impl in ("xla", "pallas"):
+        o1, o2 = cgtrans.aggregate_multi(feats, ((nb1, mk1), (nb2, mk2)),
+                                         mesh=None, impl=impl)
+        np.testing.assert_array_equal(np.asarray(o1), 0.0, err_msg=impl)
+        ref = cgtrans.aggregate_sampled(feats, nb2, mk2, mesh=None, impl=impl)
+        np.testing.assert_array_equal(np.asarray(o2), np.asarray(ref),
+                                      err_msg=impl)
+
+
+# ---------------------------------------------------------------------------
+# 2. segment-descriptor invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_segments=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+    chunk=st.integers(1, 17),
+)
+def test_property_segment_descriptor_invariants(n_segments, seed, chunk):
+    """Offsets are exact prefix sums; split∘concat is the identity; a chunk
+    boundary can never span two segments (each segment streams its own
+    command queue, so every chunk's rows carry one single K)."""
+    rng = np.random.default_rng(seed)
+    shapes = [(int(rng.integers(1, 9)), int(rng.integers(1, 6)))
+              for _ in range(n_segments)]
+    desc = cgtrans.segment_descriptor(shapes)
+
+    assert desc.shapes == tuple(shapes)
+    assert len(desc.id_offsets) == n_segments + 1
+    assert len(desc.row_offsets) == n_segments + 1
+    assert desc.id_offsets[0] == 0 and desc.row_offsets[0] == 0
+    for i, (r, k) in enumerate(shapes):
+        assert desc.id_offsets[i + 1] - desc.id_offsets[i] == r * k
+        assert desc.row_offsets[i + 1] - desc.row_offsets[i] == r
+    assert desc.n_ids == sum(r * k for r, k in shapes)
+    assert desc.n_rows == sum(r for r, _ in shapes)
+
+    # split ∘ concat = identity on the encoded stream
+    blocks = []
+    for r, k in shapes:
+        nb = jnp.asarray(rng.integers(0, 100, (1, r, k)).astype(np.int32))
+        mk = jnp.asarray(rng.random((1, r, k)) < 0.7)
+        blocks.append((nb, mk))
+    enc = cgtrans._encode_requests(blocks)
+    assert enc.shape == (1, desc.n_ids)
+    for i, (nb, mk) in enumerate(blocks):
+        sl = enc[:, desc.id_offsets[i]:desc.id_offsets[i + 1]]
+        np.testing.assert_array_equal(
+            np.asarray(sl.reshape(nb.shape)),
+            np.where(np.asarray(mk), np.asarray(nb), -1))
+
+    # chunking partitions each segment's ROWS: every chunk is a slice of
+    # exactly one segment (single K), never a straddle of two
+    for r, k in shapes:
+        for start in range(0, r, chunk):
+            rows = min(chunk, r - start)
+            assert rows >= 1 and rows * k <= r * k
+
+
+def test_segment_descriptor_rejects_degenerate():
+    with pytest.raises(ValueError):
+        cgtrans.segment_descriptor([])
+    with pytest.raises(ValueError):
+        cgtrans.segment_descriptor([(4, 0)])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    k2=st.integers(2, 6),
+    chunk=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_multi_chunked_bitexact(b, k2, chunk, seed):
+    """The chunked coalesced command queue is BIT-exact with the unchunked
+    block for arbitrary chunk sizes — chunk boundaries respect the
+    descriptor, so no seed's contributions ever split."""
+    rng = np.random.default_rng(seed)
+    P_, part, F = 2, 16, 4
+    feats = jnp.asarray(rng.standard_normal((P_, part, F)).astype(np.float32))
+    b1, b2 = _two_blocks(rng, P_, P_ * part, b, 1, k2)
+    ref = cgtrans.aggregate_multi(feats, (b1, b2), mesh=None)
+    out = cgtrans.aggregate_multi(feats, (b1, b2), mesh=None,
+                                  request_chunk=chunk)
+    for s, c in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(s))
+
+
+# ---------------------------------------------------------------------------
+# 3. deterministic dispatch counters (trace-time, jit/XLA-proof)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_dispatch_counts_halve(rng, impl):
+    """The coalescing claim, counted: ONE find (table gather) where the
+    two-stream form issues two — on both backends — and under pallas ONE
+    backward kernel scatter where the separate form issues two (the
+    combined gather's VJP scatters the whole cotangent block at once)."""
+    P_, part, F = 2, 16, 4
+    feats = jnp.asarray(rng.standard_normal((P_, part, F)).astype(np.float32))
+    b1, b2 = _two_blocks(rng, P_, P_ * part, 5, 1, 4)
+
+    def loss_sep(f):
+        a = cgtrans.aggregate_sampled(f, *b1, mesh=None, impl=impl)
+        b = cgtrans.aggregate_sampled(f, *b2, mesh=None, impl=impl)
+        return jnp.sum(a) + jnp.sum(b)
+
+    def loss_coa(f):
+        a, b = cgtrans.aggregate_multi(f, (b1, b2), mesh=None, impl=impl)
+        return jnp.sum(a) + jnp.sum(b)
+
+    with gas.count_dispatches() as sep_f:
+        jax.make_jaxpr(loss_sep)(feats)
+    with gas.count_dispatches() as coa_f:
+        jax.make_jaxpr(loss_coa)(feats)
+    # forward: finds 2 → 1; the K=1 segment stays a pure find (its reduce
+    # count is 0), so exactly one seed reduction runs either way
+    assert sep_f["find"] == 2 and coa_f["find"] == 1, (sep_f, coa_f)
+    assert sep_f["reduce"] == 1 and coa_f["reduce"] == 1, (sep_f, coa_f)
+
+    with gas.count_dispatches() as sep_g:
+        jax.make_jaxpr(jax.grad(loss_sep))(feats)
+    with gas.count_dispatches() as coa_g:
+        jax.make_jaxpr(jax.grad(loss_coa))(feats)
+    assert sep_g["find"] == 2 and coa_g["find"] == 1, (sep_g, coa_g)
+    if impl == "pallas":
+        # forward+backward kernel dispatches: the separate form pays one
+        # fused forward scatter + TWO backward cotangent scatters (one per
+        # gather); coalesced pays one forward + ONE backward
+        assert sep_g["kernel_scatter"] == 3, sep_g
+        assert coa_g["kernel_scatter"] == 2, coa_g
+
+
+def test_k1_segment_stays_pure_find(rng):
+    """A lone K=1 block never dispatches a kernel scatter forward (PR 4's
+    pure-find specialization survives coalescing)."""
+    P_, part, F = 2, 16, 4
+    feats = jnp.asarray(rng.standard_normal((P_, part, F)).astype(np.float32))
+    nb1 = jnp.asarray(rng.integers(0, P_ * part, (P_, 5, 1)).astype(np.int32))
+    mk1 = jnp.ones((P_, 5, 1), bool)
+    with gas.count_dispatches() as c:
+        jax.make_jaxpr(lambda f: cgtrans.aggregate_multi(
+            f, ((nb1, mk1),), mesh=None, impl="pallas")[0])(feats)
+    assert c["find"] == 1 and c["reduce"] == 0 and c["kernel_scatter"] == 0, c
+
+
+# ---------------------------------------------------------------------------
+# 4. the on-mesh matrix: every cell of the shared 8-way subprocess run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("flow", FLOWS)
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("chunked", ["off", "on"])
+def test_mesh_coalesce_cell(coalesce_parity_report, flow, impl, chunked):
+    line = f"coalesce flow={flow} impl={impl} chunked={chunked} ok"
+    assert line in coalesce_parity_report, (
+        f"missing/failed matrix cell: {line!r}")
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("flow", FLOWS)
+@pytest.mark.parametrize("sched", ["off", "on"])
+def test_mesh_coalesce_scheduled(coalesce_parity_report, flow, sched):
+    line = f"coalesce flow={flow} impl=pallas sched={sched} ok"
+    assert line in coalesce_parity_report, (
+        f"missing/failed scheduled cell: {line!r}")
+
+
+@pytest.mark.distributed
+def test_mesh_coalesce_collective_count(coalesce_parity_report):
+    """The headline, asserted on the real 8-way mesh: collectives-per-step
+    2 → 1 (all_gather AND all_to_all) on the cgtrans dataflow, halved on
+    baseline, plus grads and the sage_forward train-step twin."""
+    for line in (
+        "coalesce collectives cgtrans separate=2 coalesced=1 ok",
+        "coalesce collectives baseline halved ok",
+        "coalesce grads flow=cgtrans ok",
+        "coalesce grads flow=baseline ok",
+        "coalesce sage-forward mesh parity ok",
+    ):
+        assert line in coalesce_parity_report, f"missing: {line!r}"
