@@ -286,34 +286,47 @@ def bench_coalesce(ways: int = 8, B: int = 8, K1: int = 3, K2: int = 10,
 
 def check_coalesce_rows(rows) -> list:
     """The coalescing mechanism, asserted deterministically. Returns a list
-    of failure strings (empty = the claim holds)."""
+    of failure strings (empty = the claim holds). Every expected count is
+    imported from ``repro.analysis.contracts`` — the committed budget table
+    the lint tier verifies against the abstract traces — so this bench, the
+    coalesce test tier and the contracts can never disagree."""
+    from repro.analysis.contracts import (SAGE_FETCH_COLLECTIVES,
+                                          SAGE_FETCH_DISPATCH,
+                                          SAGE_FETCH_KERNEL_SCATTERS_FWD_BWD)
+
     by = {(r["flow"], r["form"]): r for r in rows if r["mode"] == "coalesce"}
     gby = {r["form"]: r for r in rows if r["mode"] == "coalesce_grad"}
     failures = []
 
-    cs, cc = by[("cgtrans", "separate")], by[("cgtrans", "coalesced")]
-    if not (cs["all_gather"] == 2 and cs["all_to_all"] == 2):
-        failures.append(f"separate cgtrans should issue 2 collectives of "
-                        f"each kind per step, saw {cs}")
-    if not (cc["all_gather"] == 1 and cc["all_to_all"] == 1):
-        failures.append(f"coalesced cgtrans must issue ONE all_gather + ONE "
-                        f"all_to_all per step, saw {cc}")
+    for form in ("separate", "coalesced"):
+        r = by[("cgtrans", form)]
+        budget = SAGE_FETCH_COLLECTIVES[form]
+        if not all(r[c] == n for c, n in budget.items()):
+            failures.append(f"{form} cgtrans must issue exactly {budget} "
+                            f"collectives per step, saw {r}")
     bs, bc = by[("baseline", "separate")], by[("baseline", "coalesced")]
     if not (bc["all_gather"] * 2 == bs["all_gather"]
             and bc["all_to_all"] * 2 == bs["all_to_all"]):
         failures.append(f"coalescing must halve baseline collectives, saw "
                         f"sep={bs} coa={bc}")
+    finds = {form: SAGE_FETCH_DISPATCH[form]["find"]
+             for form in ("separate", "coalesced")}
     for flow in FLOWS:
         s, c = by[(flow, "separate")], by[(flow, "coalesced")]
-        if not (s["finds"] == 2 and c["finds"] == 1):
-            failures.append(f"{flow}: kernel gathers must go 2 → 1, saw "
-                            f"sep={s['finds']} coa={c['finds']}")
+        if not (s["finds"] == finds["separate"]
+                and c["finds"] == finds["coalesced"]):
+            failures.append(f"{flow}: kernel gathers must go "
+                            f"{finds['separate']} → {finds['coalesced']}, "
+                            f"saw sep={s['finds']} coa={c['finds']}")
     gs, gc = gby["separate"], gby["coalesced"]
-    if not (gs["kernel_scatters"] == 3 and gc["kernel_scatters"] == 2):
+    ks = SAGE_FETCH_KERNEL_SCATTERS_FWD_BWD
+    if not (gs["kernel_scatters"] == ks["separate"]
+            and gc["kernel_scatters"] == ks["coalesced"]):
         failures.append(
-            f"pallas fwd+bwd kernel scatters must go 3 → 2 (one backward "
-            f"cotangent scatter instead of two), saw "
-            f"sep={gs['kernel_scatters']} coa={gc['kernel_scatters']}")
+            f"pallas fwd+bwd kernel scatters must go {ks['separate']} → "
+            f"{ks['coalesced']} (one backward cotangent scatter instead of "
+            f"two), saw sep={gs['kernel_scatters']} "
+            f"coa={gc['kernel_scatters']}")
     return failures
 
 

@@ -180,6 +180,33 @@ def main(argv=None) -> int:
             f"streams — the coalesce tier (ci.sh --tier coalesce) cannot "
             f"run: {e!r}")
 
+    # -- abstract tracing through shard_map (the lint/contract layer) ------
+    # scripts/lint.py verifies every DataflowContract by jax.make_jaxpr /
+    # eval_shape over ShapeDtypeStruct args — traced through shard_map with
+    # NOTHING executed, which is exactly what a headless CI box must
+    # support; probe it here so a JAX that can't trace abstractly fails
+    # with one message instead of 39 contract errors
+    try:
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        mesh = compat.make_mesh((1,), ("data",),
+                                axis_types=(compat.AxisType.Auto,))
+        fn = compat.shard_map(lambda x: jax.lax.psum(x, "data"),
+                              mesh=mesh, in_specs=P(), out_specs=P())
+        out = jax.eval_shape(fn, jax.ShapeDtypeStruct((4, 2), jnp.float32))
+        assert out.shape == (4, 2) and out.dtype == jnp.float32, out
+        jx = jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((4, 2), jnp.float32))
+        assert jx.jaxpr.eqns, "empty jaxpr from an abstract shard_map trace"
+        rows.append(("abstract trace",
+                     "functional (eval_shape/make_jaxpr through shard_map)"))
+    except Exception as e:  # noqa: BLE001 — report, don't crash the report
+        rows.append(("abstract trace", "BROKEN"))
+        failures.append(
+            f"abstract tracing through shard_map failed — the lint tier "
+            f"(scripts/lint.py dataflow contracts) cannot run: {e!r}")
+
     # -- fake-device topology for the distributed cases --------------------
     flag = "--xla_force_host_platform_device_count=8"
     rows.append(("distributed tests",

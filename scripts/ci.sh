@@ -17,6 +17,10 @@
 #                                        # one SSD command block ≡ two
 #                                        # separate streams (values, grads,
 #                                        # collective/dispatch counters)
+#   scripts/ci.sh --tier lint            # the static-analysis tier:
+#                                        # scripts/lint.py (AST rules +
+#                                        # abstract-traced dataflow
+#                                        # contracts) plus its own test file
 #   scripts/ci.sh --list-tiers           # machine-readable lane list (one
 #                                        # per line) — .github/workflows/
 #                                        # ci.yml builds its job matrix
@@ -29,7 +33,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # every lane the workflow matrix runs; `full` is tier-1 (the workflow passes
 # it `-m "not distributed"` — the subprocess cases already run one-per-lane)
-TIERS=(pallas grad sched coalesce full)
+TIERS=(pallas grad sched coalesce lint full)
 
 TIER="full"
 # seeded with the always-on flags so the array is never empty: the classic
@@ -89,6 +93,14 @@ case "$TIER" in
     # (finds 2 → 1, backward scatters 2 → 1, collectives 2 → 1 on-mesh).
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
       python -m pytest "${ARGS[@]}" tests/test_cgtrans_coalesce.py
+    ;;
+  lint)
+    # the static-analysis tier: both lint layers over the repo (lint.py
+    # forces its own fake-device topology for the abstract traces), then
+    # the analysis test file (planted-violation fixtures + the contract
+    # meta-test). Everything here traces abstractly — no mesh execution.
+    python scripts/lint.py
+    python -m pytest "${ARGS[@]}" tests/test_analysis.py
     ;;
   *)
     echo "unknown --tier '$TIER' (expected one of: ${TIERS[*]})" >&2

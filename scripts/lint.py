@@ -1,0 +1,93 @@
+"""graphlint: the repo's two-layer static analysis, as one exit code.
+
+Layer 1 (AST, ``repro.analysis.source_lint``): compat single-door rule,
+dispatch-site coverage, pytest marker registration, f64 literals — file:line
+violations, suppressible inline with ``# lint: allow(rule): justification``.
+
+Layer 2 (jaxpr, ``repro.analysis.contracts`` + ``dtype_flow``): every
+registered ``DataflowContract`` is traced ABSTRACTLY (``jax.make_jaxpr``
+over ``ShapeDtypeStruct`` args — nothing executes) on a forced 8-fake-device
+topology and checked against its committed collective/dispatch budget and
+the dtype-flow rules. A refactor that adds a collective, drops a
+``count_dispatches`` tick, or promotes to f64 fails HERE with the budget
+line that moved — before any bench row drifts.
+
+Run:   PYTHONPATH=src python scripts/lint.py [--json] [--ast-only]
+                                             [--contracts NAME_SUBSTR]
+Exit:  0 = clean; 1 = violations/failures (listed); 2 = usage.
+
+``scripts/ci.sh --tier lint`` runs this plus ``tests/test_analysis.py``;
+the CI workflow folds ``--json`` into the step summary. To amend a budget
+after an INTENTIONAL dataflow change, edit the table in
+``src/repro/analysis/contracts.py`` (see README "Static contracts").
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+# the jaxpr layer traces shard_map programs over the same 8-way fake
+# topology the distributed tests use; must be set before jax imports
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable report ({ast, contracts, ok}) — "
+                         "for the CI step summary")
+    ap.add_argument("--ast-only", action="store_true",
+                    help="skip the jaxpr layer (no jax import; sub-second)")
+    ap.add_argument("--contracts", metavar="SUBSTR", default=None,
+                    help="verify only contracts whose name contains SUBSTR")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.source_lint import lint_repo
+
+    ast_violations = [str(v) for v in lint_repo(REPO)]
+
+    contract_failures = {}
+    n_contracts = 0
+    if not args.ast_only:
+        from repro.analysis.contracts import CONTRACTS, verify_all
+        names = [n for n in CONTRACTS
+                 if args.contracts is None or args.contracts in n]
+        n_contracts = len(names)
+        contract_failures = verify_all(names)
+
+    ok = not ast_violations and not contract_failures
+    if args.json:
+        print(json.dumps({
+            "ast": ast_violations,
+            "contracts": {"checked": n_contracts,
+                          "failed": contract_failures},
+            "ok": ok,
+        }, indent=2))
+        return 0 if ok else 1
+
+    for v in ast_violations:
+        print(v, file=sys.stderr)
+    for name, fails in contract_failures.items():
+        for f in fails:
+            print(f, file=sys.stderr)
+    if ok:
+        layer2 = ("" if args.ast_only
+                  else f"; {n_contracts} dataflow contracts verified")
+        print(f"lint ok: 0 AST violations{layer2}")
+        return 0
+    print(f"\nlint FAILED: {len(ast_violations)} AST violations, "
+          f"{len(contract_failures)} contracts broken "
+          f"(budgets live in src/repro/analysis/contracts.py — amend only "
+          f"for an intentional dataflow change)", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Static analysis over the repo's two program representations.
+
+* **jaxpr layer** (``contracts``, ``dtype_flow``): every dataflow
+  entrypoint carries a committed ``DataflowContract`` — its exact collective
+  counts (canonical names via ``repro.compat``), its GAS dispatch budget
+  (find / reduce / kernel-scatter, forward vs. forward+backward), and its
+  dtype-flow waivers. ``verify_contract`` traces the entrypoint
+  *abstractly* (``jax.make_jaxpr`` over ``ShapeDtypeStruct`` arguments — no
+  execution, no device transfers, runs on headless CI) and checks the
+  traced program against the budget.
+* **AST layer** (``source_lint``): mechanical repo invariants the jaxpr
+  can't see — the compat single-door rule, kernel-dispatch tick coverage,
+  pytest marker registration, bare f64 literals.
+
+``scripts/lint.py`` runs both layers; ``scripts/ci.sh --tier lint`` is the
+CI lane. The contract tables here are the single source of truth for the
+coalescing budgets — ``tests/test_cgtrans_coalesce.py``,
+``tests/distributed_cases.py`` and ``benchmarks/collective_bytes.py``
+import them instead of hand-duplicating the numbers.
+"""
+
+from repro.analysis.contracts import (  # noqa: F401
+    CONTRACTS,
+    DataflowContract,
+    SAGE_FETCH_COLLECTIVES,
+    SAGE_FETCH_DISPATCH,
+    SAGE_FETCH_KERNEL_SCATTERS_FWD_BWD,
+    verify_contract,
+)
+from repro.analysis.dtype_flow import check_dtype_flow  # noqa: F401
+from repro.analysis.source_lint import lint_file, lint_repo  # noqa: F401

@@ -1,0 +1,163 @@
+"""Dtype-flow checks over traced jaxprs (the semantic half of the lint).
+
+Three rules, each motivated by a repo invariant:
+
+* ``f64`` — no float64 anywhere. The stack is f32-accumulation /
+  low-precision-transport by design; an f64 aval means an accidental
+  promotion (a Python float leaking through ``jnp.asarray`` under x64, a
+  ``np.float64`` literal crossing into a trace) that silently doubles every
+  byte the collective-bytes benches count.
+* ``accum`` — reductions must accumulate in f32 (or wider ints). A
+  ``dot_general`` producing bf16/f16, or a sum-reduction
+  (``reduce_sum``/``psum``/``psum_scatter``/``add_any``) over bf16/f16
+  operands, accumulates in the narrow type. This is the groundwork for the
+  ROADMAP's compressed wire format: transport may be bf16/int8, but the
+  *accumulation* stays f32 — a contract may waive this per-entrypoint
+  (``dtype_waivers``) where narrow transport is the point (see
+  ``embed_lookup``), which documents the exception instead of hiding it.
+* ``unsigned-wire`` — the id/request streams are SIGNED end-to-end: the
+  ``-1`` mask encoding of ``cgtrans._encode_requests`` and the dead-row
+  convention of the FAST-GAS kernel both rely on ``id < 0`` surviving every
+  hop. An unsigned aval entering a collective (the wire) or indexing a
+  gather/scatter (the engine) means some cast re-encoded ``-1`` as 2³²−1 —
+  numerically "in range" after a modular clip and therefore silently wrong.
+  Unsigned values in *local arithmetic* (e.g. XLA's unsigned div idiom
+  inside schedule math) are fine and not flagged.
+
+``check_dtype_flow`` walks a jaxpr recursively through every sub-jaxpr
+(pjit/shard_map/scan/custom-vjp branches) — same traversal contract as
+``launch/jaxpr_stats`` — and returns a list of ``DtypeIssue``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.compat import canonical_collective
+
+#: every rule this module can emit (contracts reference these in waivers)
+RULES = ("f64", "accum", "unsigned-wire")
+
+#: sum-accumulating primitives: reducing a narrow float through these
+#: accumulates in the narrow type (max/min are order statistics — no
+#: accumulator — so bf16 pmax is precision-lossless and not flagged)
+_SUM_REDUCTIONS = ("reduce_sum", "psum", "psum_scatter", "add_any")
+
+#: primitives whose second operand is an index stream into a table
+_INDEXED = ("gather", "scatter", "scatter-add", "scatter_add", "scatter-max",
+            "scatter-min", "scatter-mul", "dynamic_gather")
+
+_NARROW_FLOATS = (jnp.bfloat16, jnp.float16)
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypeIssue:
+    rule: str           # one of RULES
+    primitive: str      # jaxpr primitive that exhibits it
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.primitive}: {self.detail}"
+
+
+def _avals(vars_) -> List[Tuple[str, object]]:
+    out = []
+    for v in vars_:
+        aval = getattr(v, "aval", None)
+        dt = getattr(aval, "dtype", None)
+        if dt is not None:
+            out.append((str(dt), dt))
+    return out
+
+
+def _sub_jaxprs(value):
+    if hasattr(value, "eqns"):
+        yield value
+    elif hasattr(value, "jaxpr") and hasattr(value.jaxpr, "eqns"):
+        yield value.jaxpr
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+    elif isinstance(value, dict):
+        for v in value.values():
+            yield from _sub_jaxprs(v)
+
+
+def _is_narrow_float(dt) -> bool:
+    return any(dt == n for n in _NARROW_FLOATS)
+
+
+def _is_unsigned(dt) -> bool:
+    return jnp.issubdtype(dt, jnp.unsignedinteger)
+
+
+def check_dtype_flow(jaxpr, *, waive: Sequence[str] = ()) -> List[DtypeIssue]:
+    """All dtype-flow issues in ``jaxpr`` (a ``Jaxpr`` or ``ClosedJaxpr``),
+    recursing into sub-jaxprs. ``waive`` drops the named rules — contracts
+    use it to document intentional exceptions (e.g. bf16 transport)."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    waived = frozenset(waive)
+    for w in waived:
+        if w not in RULES:
+            raise ValueError(f"unknown dtype rule {w!r} (have {RULES})")
+    issues: List[DtypeIssue] = []
+    stack = [jaxpr]
+    seen = set()
+    while stack:
+        j = stack.pop()
+        if id(j) in seen:
+            continue
+        seen.add(id(j))
+        for eqn in j.eqns:
+            prim = eqn.prim.name if hasattr(eqn, "prim") else eqn.primitive.name
+            in_avals = _avals(eqn.invars)
+            out_avals = _avals(eqn.outvars)
+
+            if "f64" not in waived:
+                for name, dt in in_avals + out_avals:
+                    if name == "float64":  # lint: allow(f64-literal): the rule that bans it must name it
+                        issues.append(DtypeIssue(
+                            "f64", prim, "float64 aval in the traced program "
+                            "(f32-accumulation stack — find the promotion)"))
+                        break
+
+            if "accum" not in waived:
+                if prim == "dot_general" and out_avals and _is_narrow_float(
+                        out_avals[0][1]):
+                    issues.append(DtypeIssue(
+                        "accum", prim,
+                        f"contraction accumulates in {out_avals[0][0]} — "
+                        f"request preferred_element_type=float32"))
+                canon = canonical_collective(prim) or prim
+                if canon in _SUM_REDUCTIONS:
+                    for name, dt in in_avals:
+                        if _is_narrow_float(dt):
+                            issues.append(DtypeIssue(
+                                "accum", prim,
+                                f"sum-reduction over {name} accumulates in "
+                                f"{name}, not f32"))
+                            break
+
+            if "unsigned-wire" not in waived:
+                if canonical_collective(prim) is not None:
+                    for name, dt in in_avals + out_avals:
+                        if _is_unsigned(dt):
+                            issues.append(DtypeIssue(
+                                "unsigned-wire", prim,
+                                f"{name} id/payload stream on the wire — the "
+                                f"-1 mask encoding needs signed ints"))
+                            break
+                elif prim in _INDEXED and len(eqn.invars) >= 2:
+                    idx = _avals(eqn.invars[1:2])
+                    if idx and _is_unsigned(idx[0][1]):
+                        issues.append(DtypeIssue(
+                            "unsigned-wire", prim,
+                            f"{idx[0][0]} index stream into {prim} — the "
+                            f"dead-row convention needs id < 0 representable"))
+            for v in eqn.params.values():
+                stack.extend(_sub_jaxprs(v))
+    return issues

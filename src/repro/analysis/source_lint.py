@@ -1,0 +1,352 @@
+"""AST-level repo lint (the mechanical half of the static analysis).
+
+Four invariant families, each previously enforced only by review:
+
+* ``compat-door`` — the ROADMAP's standing single-door rule: every
+  version-sensitive JAX API (``shard_map``, ``make_mesh``, ``AxisType``,
+  ``psum_scatter``, anything under ``jax.experimental``) is imported from
+  ``repro.compat`` and nowhere else. The two pallas ``kernel.py`` files are
+  the one allowlisted exception (``jax.experimental.pallas`` IS their
+  subject matter), and ``compat.py`` itself is the door.
+* ``pallas-call-site`` / ``collective-site`` / ``unticked-dispatch`` —
+  dispatch-site coverage. Raw ``pallas_call`` sites live only in the kernel
+  modules; cross-shard collective calls live only in the contract-covered
+  dataflow modules (``analysis/contracts.py`` budgets every one of them);
+  and any function outside the kernel modules that reaches a raw kernel
+  entry (``gas_scatter_pallas``/``gas_scatter_banded``) must either be a
+  private impl (reached via a ticking public wrapper) or tick
+  ``count_dispatches`` itself. The AST layer catches *new, uncovered* sites
+  appearing; the jaxpr layer (contracts) catches covered sites drifting in
+  count — together a dispatch can neither appear nor multiply unnoticed.
+* ``unknown-marker`` — every ``pytest.mark.<x>`` in tests must be
+  registered in pyproject (CI runs ``-W
+  error::pytest.PytestUnknownMarkWarning``; this fails at lint time with a
+  file:line instead of at collection time in one lane).
+* ``f64-literal`` — no ``float64``/x64 literals outside tests (the
+  dtype-flow jaxpr rule catches *traced* promotions; this catches the
+  source-level seeds of them). Host-side float64 test oracles are
+  legitimate, hence the scope.
+
+A violating line can be suppressed with an inline justification::
+
+    from jax.experimental import pallas  # lint: allow(compat-door): kernel module
+
+The justification text is REQUIRED — a bare ``allow()`` does not suppress.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+#: every rule this module can emit
+RULES = ("compat-door", "pallas-call-site", "collective-site",
+         "unticked-dispatch", "unknown-marker", "f64-literal")
+
+#: the single door itself — exempt from the compat/collective rules
+COMPAT_DOOR = "src/repro/compat.py"
+
+#: the raw-kernel modules: ``jax.experimental.pallas`` + ``pallas_call``
+#: allowed, and their ``gas_*`` entries are the raw dispatches others wrap
+PALLAS_KERNEL_ALLOWLIST = (
+    "src/repro/kernels/gas_scatter/kernel.py",
+    "src/repro/kernels/flash_attention/kernel.py",
+)
+
+#: modules allowed to issue cross-shard collectives — exactly the set the
+#: dataflow contracts budget (a collective elsewhere is uncounted traffic)
+COLLECTIVE_SITE_ALLOWLIST = (
+    COMPAT_DOOR,
+    "src/repro/core/cgtrans.py",
+    "src/repro/models/embedding.py",
+    "src/repro/train/pipeline.py",
+)
+
+#: version-sensitive attribute paths that must route through repro.compat
+_COMPAT_ONLY_ATTRS = ("jax.shard_map", "jax.make_mesh", "lax.psum_scatter",
+                      "jax.lax.psum_scatter", "jax.sharding.AxisType")
+
+#: collective API names (call sites; the jaxpr layer counts what they trace)
+_COLLECTIVE_CALLS = ("psum", "psum_scatter", "all_to_all", "all_gather",
+                     "ppermute", "pmax", "pmin")
+
+#: raw kernel entries — referencing these outside kernel.py requires a tick
+_RAW_DISPATCHES = ("gas_scatter_pallas", "gas_scatter_banded", "pallas_call")
+
+#: pytest's built-in marks (never registered in pyproject)
+_BUILTIN_MARKS = frozenset({
+    "parametrize", "skip", "skipif", "xfail", "usefixtures",
+    "filterwarnings",
+})
+
+_ALLOW_RE = re.compile(
+    r"#\s*lint:\s*allow\(([\w\s,-]+)\)\s*[:—-]\s*(\S.*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str          # repo-relative, posix
+    line: int          # 1-based
+    rule: str          # one of RULES
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.lax.psum_scatter' for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _allowed_lines(source: str) -> Dict[int, Tuple[str, ...]]:
+    """line → rules suppressed there (justified ``lint: allow`` comments)."""
+    out: Dict[int, Tuple[str, ...]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _ALLOW_RE.search(text)
+        if m:
+            out[i] = tuple(r.strip() for r in m.group(1).split(","))
+    return out
+
+
+def registered_markers(pyproject_path: Path) -> frozenset:
+    """Marker names registered under [tool.pytest.ini_options].markers."""
+    text = pyproject_path.read_text()
+    try:
+        import tomllib
+    except ImportError:                       # Python 3.10: no tomllib —
+        # regex-parse the markers list so the rule neither crashes nor
+        # false-positives every registered marker
+        return frozenset(re.findall(r'^\s*"([\w-]+)\s*:', text, re.M))
+    data = tomllib.loads(text)
+    markers = (data.get("tool", {}).get("pytest", {})
+               .get("ini_options", {}).get("markers", []))
+    return frozenset(m.split(":")[0].strip() for m in markers)
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, rel: str, *, markers: frozenset):
+        self.rel = rel
+        self.markers = markers
+        self.violations: List[Violation] = []
+        self.func_stack: List[ast.FunctionDef] = []
+        # function → (is_private, ticks, raw-dispatch refs [(line, name)])
+        self.func_info: List[Tuple[ast.FunctionDef, bool, bool,
+                                   List[Tuple[int, str]]]] = []
+
+        self.is_compat = rel == COMPAT_DOOR
+        self.is_kernel = rel in PALLAS_KERNEL_ALLOWLIST
+        self.in_src = rel.startswith("src/repro/")
+        self.in_tests = rel.startswith("tests/")
+        self.collectives_ok = rel in COLLECTIVE_SITE_ALLOWLIST
+
+    def _flag(self, node: ast.AST, rule: str, msg: str):
+        self.violations.append(
+            Violation(self.rel, getattr(node, "lineno", 0), rule, msg))
+
+    # -- compat single door -------------------------------------------------
+
+    def visit_Import(self, node: ast.Import):
+        if not self.is_compat:
+            for alias in node.names:
+                if alias.name.startswith("jax.experimental"):
+                    if not (self.is_kernel
+                            and alias.name.startswith("jax.experimental.pallas")):
+                        self._flag(node, "compat-door",
+                                   f"import {alias.name} — version-sensitive "
+                                   f"APIs come from repro.compat")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        mod = node.module or ""
+        if not self.is_compat:
+            if mod.startswith("jax.experimental"):
+                pallas = (mod.startswith("jax.experimental.pallas")
+                          or (mod == "jax.experimental"
+                              and all(a.name == "pallas" for a in node.names)))
+                if not (self.is_kernel and pallas):
+                    self._flag(node, "compat-door",
+                               f"from {mod} import … — version-sensitive "
+                               f"APIs come from repro.compat")
+            if mod == "jax.sharding":
+                for alias in node.names:
+                    if alias.name == "AxisType":
+                        self._flag(node, "compat-door",
+                                   "AxisType comes from repro.compat (stubbed "
+                                   "on pre-AxisType JAX)")
+            if mod in ("jax", "jax.lax") or mod.endswith(".lax"):
+                for alias in node.names:
+                    if alias.name in ("shard_map", "make_mesh", "psum_scatter"):
+                        self._flag(node, "compat-door",
+                                   f"{alias.name} comes from repro.compat")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        name = _dotted(node)
+        if name and not self.is_compat:
+            if name in _COMPAT_ONLY_ATTRS or name.endswith(".shard_map"):
+                if name.startswith(("jax.", "lax.")):
+                    self._flag(node, "compat-door",
+                               f"{name} — use the repro.compat wrapper")
+        if (name and name.split(".")[-1] == "pallas_call"
+                and not self.is_kernel):
+            self._flag(node, "pallas-call-site",
+                       "pallas_call outside the kernel modules — wrap it in "
+                       "a ticked dispatch (kernels/*/ops.py pattern)")
+        self._note_raw_dispatch(node, name)
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name):
+        if node.id == "pallas_call" and not self.is_kernel:
+            self._flag(node, "pallas-call-site",
+                       "pallas_call outside the kernel modules")
+        self._note_raw_dispatch(node, node.id)
+        self.generic_visit(node)
+
+    # -- dispatch coverage --------------------------------------------------
+
+    def _note_raw_dispatch(self, node: ast.AST, name: Optional[str]):
+        if not name or self.is_kernel:
+            return
+        leaf = name.split(".")[-1]
+        if leaf in _RAW_DISPATCHES and leaf != "pallas_call":
+            if self.func_stack:
+                self.func_info[-1][3].append((node.lineno, leaf))
+            else:
+                self._flag(node, "unticked-dispatch",
+                           f"module-level reference to raw kernel entry "
+                           f"{leaf}")
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self.func_stack.append(node)
+        self.func_info.append(
+            (node, node.name.startswith("_"), False, []))
+        idx = len(self.func_info) - 1
+        self.generic_visit(node)
+        self.func_stack.pop()
+        fn, private, _, refs = self.func_info[idx]
+        ticks = any(
+            isinstance(n, ast.Call) and (
+                (isinstance(n.func, ast.Name) and n.func.id == "_tick")
+                or (isinstance(n.func, ast.Attribute)
+                    and n.func.attr == "_tick"))
+            for n in ast.walk(fn))
+        if refs and not private and not ticks:
+            line, leaf = refs[0]
+            self.violations.append(Violation(
+                self.rel, line, "unticked-dispatch",
+                f"public function {fn.name!r} reaches raw kernel entry "
+                f"{leaf} without a count_dispatches tick — tick it or make "
+                f"it a private impl behind a ticked wrapper"))
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- collective call sites ----------------------------------------------
+
+    def visit_Call(self, node: ast.Call):
+        name = _dotted(node.func)
+        if name and self.in_src and not self.collectives_ok:
+            parts = name.split(".")
+            leaf = parts[-1]
+            base_ok = len(parts) == 1 or parts[-2] in ("lax", "jax", "compat")
+            if leaf in _COLLECTIVE_CALLS and base_ok:
+                self._flag(node, "collective-site",
+                           f"collective {leaf}() outside the contract-covered "
+                           f"modules {COLLECTIVE_SITE_ALLOWLIST[1:]} — every "
+                           f"collective site must carry a DataflowContract "
+                           f"budget")
+        self.generic_visit(node)
+
+    # -- marker registration + f64 literals ---------------------------------
+
+    def _check_marker(self, name: str, node: ast.AST):
+        if name not in self.markers and name not in _BUILTIN_MARKS:
+            self._flag(node, "unknown-marker",
+                       f"pytest.mark.{name} is not registered in "
+                       f"[tool.pytest.ini_options].markers")
+
+    def visit_Module(self, node: ast.Module):
+        self.generic_visit(node)
+        if self.in_tests:
+            for n in ast.walk(node):
+                name = _dotted(n) if isinstance(n, ast.Attribute) else None
+                if name and name.startswith("pytest.mark."):
+                    self._check_marker(name.split(".")[2], n)
+
+    def visit_Constant(self, node: ast.Constant):
+        if not self.in_tests and isinstance(node.value, str):
+            if node.value in ("float64", "jax_enable_x64"):  # lint: allow(f64-literal): the rule that bans them must name them
+                self._flag(node, "f64-literal",
+                           f"{node.value!r} literal — the stack is f32; "
+                           f"x64/f64 belongs only in test oracles")
+        self.generic_visit(node)
+
+
+def _f64_attrs(tree: ast.AST, linter: _Linter):
+    if linter.in_tests:
+        return
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Attribute) and n.attr == "float64":  # lint: allow(f64-literal): the rule that bans it must name it
+            linter._flag(n, "f64-literal",
+                         "float64 attribute — the stack is f32 end-to-end "
+                         "(dtype_flow traces the consequences; fix the seed)")
+
+
+def lint_file(path: Path, root: Path, *,
+              markers: Optional[frozenset] = None) -> List[Violation]:
+    """Lint one file; ``root`` anchors the repo-relative path the role rules
+    key on. ``markers``: registered pytest markers (parsed from
+    ``root/pyproject.toml`` when omitted)."""
+    rel = path.resolve().relative_to(root.resolve()).as_posix()
+    if markers is None:
+        markers = registered_markers(root / "pyproject.toml")
+    source = path.read_text()
+    tree = ast.parse(source, filename=str(path))
+    linter = _Linter(rel, markers=markers)
+    linter.visit(tree)
+    _f64_attrs(tree, linter)
+    allowed = _allowed_lines(source)
+    return [v for v in linter.violations
+            if v.rule not in allowed.get(v.line, ())]
+
+
+def lint_repo(root: Path) -> List[Violation]:
+    """Lint every analyzable source file in the repo: ``src/repro``,
+    ``scripts``, ``benchmarks``, ``tests`` — excluding the planted-violation
+    corpus ``tests/_lint_fixtures`` (the fixture tests lint those
+    explicitly and assert the violations ARE caught)."""
+    root = root.resolve()
+    markers = registered_markers(root / "pyproject.toml")
+    violations: List[Violation] = []
+    for sub in ("src/repro", "scripts", "benchmarks", "tests"):
+        base = root / sub
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            if "_lint_fixtures" in path.parts:
+                continue
+            violations.extend(lint_file(path, root, markers=markers))
+    return violations
+
+
+def main(argv: Sequence[str] = ()) -> int:
+    root = Path(argv[0]) if argv else Path.cwd()
+    vs = lint_repo(root)
+    for v in vs:
+        print(v, file=sys.stderr)
+    return 1 if vs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -145,6 +145,42 @@ else:
     FEATURES["psum_scatter"] = "repro.compat psum+slice emulation"
 
 
+# ---------------------------------------------------------------------------
+# collective primitive NAMES (jaxpr spellings drift across JAX versions)
+# ---------------------------------------------------------------------------
+
+#: canonical collective name → every jaxpr primitive spelling that means it.
+#: The *API* drift is handled above (``psum_scatter``); this is the *trace*
+#: side of the same single-door rule: ``lax.psum_scatter`` lowers to a
+#: primitive literally named ``reduce_scatter``, ``lax.ppermute`` to
+#: ``ppermute`` or ``collective_permute`` depending on version, and
+#: ``shard_map``'s replication checker rewrites ``psum`` to ``psum2``
+#: (0.4.3x-era; later versions went back to ``psum``). Anything that reads
+#: jaxprs (``launch/jaxpr_stats``, ``analysis/contracts``) counts under the
+#: canonical key so committed budgets survive version bumps.
+COLLECTIVE_ALIASES: Dict[str, Tuple[str, ...]] = {
+    "all_to_all": ("all_to_all",),
+    "all_gather": ("all_gather",),
+    "psum": ("psum", "psum2"),
+    "psum_scatter": ("psum_scatter", "reduce_scatter"),
+    "ppermute": ("ppermute", "collective_permute"),
+    "pmax": ("pmax",),
+    "pmin": ("pmin",),
+}
+
+_SPELLING_TO_CANONICAL: Dict[str, str] = {
+    spelling: canon
+    for canon, spellings in COLLECTIVE_ALIASES.items()
+    for spelling in spellings
+}
+
+
+def canonical_collective(primitive_name: str) -> Optional[str]:
+    """Canonical collective name for a jaxpr primitive name, or ``None`` if
+    the primitive is not a cross-shard collective."""
+    return _SPELLING_TO_CANONICAL.get(primitive_name)
+
+
 def feature_matrix() -> Dict[str, object]:
     """Snapshot of what the compat layer detected on the installed JAX."""
     return dict(FEATURES)

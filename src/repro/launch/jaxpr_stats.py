@@ -32,11 +32,26 @@ from typing import Iterable, Optional
 
 import jax
 
-#: the cross-shard communication primitives of the CGTrans dataflows
-COLLECTIVE_PRIMITIVES = (
-    "all_to_all", "all_gather", "psum", "psum_scatter", "reduce_scatter",
-    "ppermute", "pmax", "pmin",
-)
+from repro.compat import COLLECTIVE_ALIASES, canonical_collective
+
+#: the cross-shard communication primitives of the CGTrans dataflows, by
+#: CANONICAL name — the jaxpr spellings drift across JAX versions (``psum``
+#: traces as ``psum2`` under some shard_map replication checkers,
+#: ``lax.psum_scatter`` lowers to a primitive named ``reduce_scatter``,
+#: ``ppermute`` to ``collective_permute``), so the version-sensitive alias
+#: table lives in ``repro.compat`` per the single-door rule and every count
+#: this module reports is folded onto the canonical key.
+COLLECTIVE_PRIMITIVES = tuple(COLLECTIVE_ALIASES)
+
+
+def canonicalize_collectives(counts: Counter) -> Counter:
+    """Fold version-specific collective spellings onto their canonical names
+    (``psum2`` → ``psum``, ``reduce_scatter`` → ``psum_scatter``, …);
+    non-collective primitive names pass through unchanged."""
+    out: Counter = Counter()
+    for name, n in counts.items():
+        out[canonical_collective(name) or name] += n
+    return out
 
 
 def _sub_jaxprs(value):
@@ -81,14 +96,18 @@ def primitive_counts(fn, *args, keys: Optional[Iterable[str]] = None,
     ``keys`` restricts the result (missing keys read 0 from the Counter
     anyway; restricting just keeps reports small). The trace is exactly what
     ``jax.jit`` would stage, so the counts describe the program XLA receives
-    — before any combiner/DCE pass can blur the picture.
+    — before any combiner/DCE pass can blur the picture. Collective
+    spellings are canonicalized (see ``canonicalize_collectives``), so
+    ``keys`` should use canonical names.
     """
-    counts = count_primitives(jax.make_jaxpr(fn)(*args, **kwargs))
+    counts = canonicalize_collectives(
+        count_primitives(jax.make_jaxpr(fn)(*args, **kwargs)))
     if keys is not None:
         return Counter({k: counts[k] for k in keys})
     return counts
 
 
 def collective_counts(fn, *args, **kwargs) -> Counter:
-    """``primitive_counts`` restricted to the cross-shard collectives."""
+    """``primitive_counts`` restricted to the cross-shard collectives
+    (canonical names)."""
     return primitive_counts(fn, *args, keys=COLLECTIVE_PRIMITIVES, **kwargs)

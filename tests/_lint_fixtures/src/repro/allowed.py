@@ -1,0 +1,4 @@
+"""A JUSTIFIED inline suppression (lint fixture — parsed, never imported):
+this file must lint clean, demonstrating the escape hatch works."""
+
+from jax.experimental import pallas  # noqa: F401  # lint: allow(compat-door): fixture — the justified-suppression escape hatch under test

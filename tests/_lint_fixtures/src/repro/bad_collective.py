@@ -1,0 +1,9 @@
+"""Planted collective-site violation (lint fixture — parsed, never
+imported): a psum in a src/repro module outside the contract-covered
+allowlist is uncounted cross-shard traffic."""
+
+from jax import lax
+
+
+def leak(x):
+    return lax.psum(x, "data")

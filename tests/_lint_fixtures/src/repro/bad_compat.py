@@ -1,0 +1,10 @@
+"""Planted compat-door violations (lint fixture — parsed, never imported)."""
+
+from jax.experimental.shard_map import shard_map  # noqa: F401
+from jax.sharding import AxisType  # noqa: F401
+
+
+def build(mesh, fn):
+    import jax
+
+    return jax.shard_map(fn, mesh=mesh)

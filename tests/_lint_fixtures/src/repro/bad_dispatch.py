@@ -1,0 +1,13 @@
+"""Planted dispatch-coverage violations (lint fixture — parsed, never
+imported): a PUBLIC function reaching a raw kernel entry with no
+count_dispatches tick, and a pallas_call site outside the kernel modules."""
+
+from repro.kernels.gas_scatter import kernel as K
+
+
+def scatter_rows(dst, vals, n):
+    return K.gas_scatter_pallas(dst, vals, n, op="add")
+
+
+def call_kernel(pl, body, out_shape):
+    return pl.pallas_call(body, out_shape=out_shape)

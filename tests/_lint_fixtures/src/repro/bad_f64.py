@@ -1,0 +1,9 @@
+"""Planted f64-literal violations (lint fixture — parsed, never imported)."""
+
+import numpy as np
+
+ACC_DTYPE = np.float64
+
+
+def promote(x):
+    return x.astype("float64")

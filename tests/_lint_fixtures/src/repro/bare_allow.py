@@ -1,0 +1,4 @@
+"""A BARE ``lint: allow`` with no justification (lint fixture — parsed,
+never imported): the suppression must NOT take effect."""
+
+from jax.experimental import pallas  # noqa: F401  # lint: allow(compat-door)

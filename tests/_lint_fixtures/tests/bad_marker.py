@@ -1,0 +1,9 @@
+"""Planted unknown-marker violation (lint fixture — parsed, never
+imported/collected): ``bogus_tier`` is not registered in pyproject."""
+
+import pytest
+
+
+@pytest.mark.bogus_tier
+def check_nothing():
+    assert True

@@ -264,10 +264,16 @@ def case_cgtrans_coalesce_parity():
     def coa(f, fl):
         return cgtrans.aggregate_multi(f, (b1, b2), mesh=mesh, dataflow=fl)
 
+    # the expected counts come from analysis/contracts.py — the committed
+    # budget table is the single source of truth (lint verifies it against
+    # the abstract trace; this asserts it on the REAL mesh programs)
+    from repro.analysis.contracts import SAGE_FETCH_COLLECTIVES
     cs = collective_counts(lambda f: sep(f, "cgtrans"), feats)
     cc = collective_counts(lambda f: coa(f, "cgtrans"), feats)
-    assert cs["all_to_all"] == 2 and cs["all_gather"] == 2, dict(cs)
-    assert cc["all_to_all"] == 1 and cc["all_gather"] == 1, dict(cc)
+    for counts, budget in ((cs, SAGE_FETCH_COLLECTIVES["separate"]),
+                           (cc, SAGE_FETCH_COLLECTIVES["coalesced"])):
+        for coll, want in budget.items():
+            assert counts[coll] == want, (coll, want, dict(counts))
     print("coalesce collectives cgtrans separate=2 coalesced=1 ok")
     bs = collective_counts(lambda f: sep(f, "baseline"), feats)
     bc = collective_counts(lambda f: coa(f, "baseline"), feats)

@@ -1,0 +1,337 @@
+"""Tier: lint — the static-analysis subsystem tested against itself.
+
+Three groups:
+
+* AST fixtures: each planted-violation file in ``tests/_lint_fixtures``
+  (linted with that directory as the fake repo root, so the ``src/repro``
+  vs ``tests`` role rules apply) must surface exactly its planted rule, the
+  justified suppression must lint clean, and the bare (unjustified)
+  ``allow()`` must NOT suppress. Plus: the REAL repo must be AST-clean.
+* jaxpr fixtures: a deliberately two-collective shard_map program must
+  FAIL a one-psum ``DataflowContract`` (and pass the honest two-psum one);
+  ``check_dtype_flow`` must flag a planted f64 trace, a bf16
+  sum-accumulation, and an unsigned id stream feeding a gather — and stay
+  quiet on the healthy f32/int32 equivalents.
+* meta: every public aggregate entrypoint configuration
+  (dataflow × impl × coalesce × scheduled) has a registered contract, the
+  ``SAGE_FETCH_*`` headline tables agree with the sage contracts they
+  summarize, and ``scripts/lint.py --json`` (the CI gate) reports ok on a
+  cheap contract subset.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+pytestmark = pytest.mark.lint
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "_lint_fixtures"
+
+
+def _lint_fixture(rel):
+    from repro.analysis.source_lint import lint_file, registered_markers
+
+    markers = registered_markers(REPO / "pyproject.toml")
+    return lint_file(FIXTURES / rel, FIXTURES, markers=markers)
+
+
+# ---------------------------------------------------------------------------
+# AST layer: planted violations are caught; the real repo is clean
+# ---------------------------------------------------------------------------
+
+def test_compat_door_fixture_caught():
+    vs = _lint_fixture("src/repro/bad_compat.py")
+    assert {v.rule for v in vs} == {"compat-door"}
+    # the experimental import, the AxisType import, and the jax.shard_map
+    # attribute are three distinct doors around compat
+    assert len(vs) >= 3, vs
+
+
+def test_f64_literal_fixture_caught():
+    vs = _lint_fixture("src/repro/bad_f64.py")
+    assert {v.rule for v in vs} == {"f64-literal"}
+    assert len(vs) == 2, vs           # the attribute form and the string form
+
+
+def test_collective_site_fixture_caught():
+    vs = _lint_fixture("src/repro/bad_collective.py")
+    assert [v.rule for v in vs] == ["collective-site"]
+    assert "DataflowContract" in vs[0].msg
+
+
+def test_dispatch_fixtures_caught():
+    vs = _lint_fixture("src/repro/bad_dispatch.py")
+    rules = sorted(v.rule for v in vs)
+    assert rules == ["pallas-call-site", "unticked-dispatch"], vs
+    unticked = next(v for v in vs if v.rule == "unticked-dispatch")
+    assert "scatter_rows" in unticked.msg
+
+
+def test_unknown_marker_fixture_caught():
+    vs = _lint_fixture("tests/bad_marker.py")
+    assert [v.rule for v in vs] == ["unknown-marker"]
+    assert "bogus_tier" in vs[0].msg
+
+
+def test_justified_suppression_lints_clean():
+    assert _lint_fixture("src/repro/allowed.py") == []
+
+
+def test_bare_allow_does_not_suppress():
+    vs = _lint_fixture("src/repro/bare_allow.py")
+    assert [v.rule for v in vs] == ["compat-door"], vs
+
+
+def test_repo_is_ast_clean():
+    """The acceptance criterion the fixtures exist to protect: the lint,
+    run on HEAD, finds nothing (fixture corpus excluded by lint_repo)."""
+    from repro.analysis.source_lint import lint_repo
+
+    vs = lint_repo(REPO)
+    assert vs == [], "\n".join(str(v) for v in vs)
+
+
+def test_lint_marker_is_registered():
+    from repro.analysis.source_lint import registered_markers
+
+    marks = registered_markers(REPO / "pyproject.toml")
+    assert {"lint", "distributed"} <= marks
+
+
+# ---------------------------------------------------------------------------
+# jaxpr layer: contracts catch planted dataflow drift
+# ---------------------------------------------------------------------------
+
+def _double_psum():
+    """A shard_map program that deliberately issues TWO psums — the 'someone
+    added a collective' failure mode the contracts exist to catch."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    mesh = compat.make_mesh((1,), ("data",),
+                            axis_types=(compat.AxisType.Auto,))
+    fn = compat.shard_map(
+        lambda x: jax.lax.psum(jax.lax.psum(x, "data"), "data"),
+        mesh=mesh, in_specs=P(), out_specs=P())
+    return fn, (jax.ShapeDtypeStruct((4,), jnp.float32),)
+
+
+def test_contract_fails_on_extra_collective():
+    from repro.analysis.contracts import DataflowContract, verify_contract
+
+    lying = DataflowContract(name="fixture/double-psum",
+                             build=_double_psum, forward={"psum": 1})
+    fails = verify_contract(lying)
+    assert fails, "a two-psum trace passed a one-psum budget"
+    assert any("psum" in f and "budget 1" in f and "traced 2" in f
+               for f in fails), fails
+
+
+def test_contract_passes_on_honest_budget():
+    from repro.analysis.contracts import DataflowContract, verify_contract
+
+    honest = DataflowContract(name="fixture/double-psum-honest",
+                              build=_double_psum, forward={"psum": 2})
+    assert verify_contract(honest) == []
+
+
+def test_contract_rejects_unknown_budget_key():
+    from repro.analysis.contracts import DataflowContract
+
+    with pytest.raises(ValueError, match="unknown budget key"):
+        DataflowContract(name="fixture/bogus-key",
+                         build=_double_psum, forward={"bogus": 1})
+
+
+def test_dtype_flow_flags_planted_f64():
+    import jax
+
+    from repro.analysis.dtype_flow import check_dtype_flow
+
+    jax.config.update("jax_enable_x64", True)
+    try:
+        jaxpr = jax.make_jaxpr(lambda x: x * 2.0)(
+            jax.ShapeDtypeStruct((4,), "float64"))
+    finally:
+        jax.config.update("jax_enable_x64", False)
+    issues = check_dtype_flow(jaxpr)
+    assert any(i.rule == "f64" for i in issues), issues
+    # and the waiver drops exactly that rule
+    assert check_dtype_flow(jaxpr, waive=("f64",)) == []
+
+
+def test_dtype_flow_flags_bf16_accumulation():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.dtype_flow import check_dtype_flow
+
+    bf = jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)
+    jaxpr = jax.make_jaxpr(lambda a, b: a @ b)(bf, bf)
+    issues = check_dtype_flow(jaxpr)
+    assert any(i.rule == "accum" and i.primitive == "dot_general"
+               for i in issues), issues
+    # jnp.sum over bf16 upcasts to an f32 accumulator on its own (JAX's
+    # upcast-f16-for-computation) — healthy, and must NOT be flagged; nor an
+    # f32 contraction
+    clean = jax.make_jaxpr(jnp.sum)(jax.ShapeDtypeStruct((8,), jnp.bfloat16))
+    assert check_dtype_flow(clean) == []
+    f32 = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    assert check_dtype_flow(jax.make_jaxpr(lambda a, b: a @ b)(f32, f32)) == []
+
+
+def test_dtype_flow_flags_unsigned_index_stream():
+    """A raw lax.gather fed uint32 indices (jnp indexing canonicalizes to
+    int32 on its own, so the raw-kernel path is where drift can hide)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.analysis.dtype_flow import check_dtype_flow
+
+    dnums = lax.GatherDimensionNumbers(offset_dims=(1,),
+                                       collapsed_slice_dims=(0,),
+                                       start_index_map=(0,))
+
+    def lookup(t, i):
+        return lax.gather(t, i, dnums, (1, 4))
+
+    table = jax.ShapeDtypeStruct((16, 4), jnp.float32)
+    bad = jax.make_jaxpr(lookup)(
+        table, jax.ShapeDtypeStruct((8, 1), jnp.uint32))
+    issues = check_dtype_flow(bad)
+    assert any(i.rule == "unsigned-wire" and i.primitive == "gather"
+               for i in issues), issues
+    # the signed stream (the -1 mask encoding's home) is healthy
+    good = jax.make_jaxpr(lookup)(
+        table, jax.ShapeDtypeStruct((8, 1), jnp.int32))
+    assert check_dtype_flow(good) == []
+
+
+def test_dtype_flow_flags_unsigned_on_the_wire():
+    """An unsigned aval entering a collective — some cast re-encoded the -1
+    mask ids as 2³²−1 before they shipped."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.analysis.dtype_flow import check_dtype_flow
+
+    mesh = compat.make_mesh((1,), ("data",),
+                            axis_types=(compat.AxisType.Auto,))
+
+    def traced(dtype):
+        fn = compat.shard_map(lambda x: jax.lax.psum(x, "data"),
+                              mesh=mesh, in_specs=P(), out_specs=P())
+        return jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((4,), dtype))
+
+    issues = check_dtype_flow(traced(jnp.uint32))
+    assert any(i.rule == "unsigned-wire" for i in issues), issues
+    assert check_dtype_flow(traced(jnp.int32)) == []
+
+
+def test_dtype_flow_rejects_unknown_waiver():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.dtype_flow import check_dtype_flow
+
+    jaxpr = jax.make_jaxpr(lambda x: x + 1)(
+        jax.ShapeDtypeStruct((2,), jnp.float32))
+    with pytest.raises(ValueError, match="unknown dtype rule"):
+        check_dtype_flow(jaxpr, waive=("bogus",))
+
+
+# ---------------------------------------------------------------------------
+# meta: coverage, single-source-of-truth, and the CLI gate
+# ---------------------------------------------------------------------------
+
+def _expected_contract_grid():
+    grid = set()
+    for ep in ("aggregate_sampled", "aggregate_multi"):
+        for flow in ("cgtrans", "baseline"):
+            for impl in ("xla", "pallas"):
+                grid.add(f"{ep}/{flow}/{impl}")
+            grid.add(f"{ep}/{flow}/pallas/sched")
+    for ep in ("sage_forward", "train_step"):
+        for form in ("separate", "coalesced"):
+            for impl in ("xla", "pallas"):
+                grid.add(f"{ep}/{form}/{impl}")
+            grid.add(f"{ep}/{form}/pallas/sched")
+    for flow in ("cgtrans", "baseline"):
+        for impl in ("xla", "pallas"):
+            grid.add(f"separate_fetch/{flow}/{impl}")
+            for op in ("add", "max"):
+                grid.add(f"aggregate_edges/{flow}/{op}/{impl}")
+    grid |= {"embed_lookup/cgtrans/xla", "embed_lookup/cgtrans/pallas",
+             "embed_lookup/baseline/xla"}
+    return grid
+
+
+def test_every_entrypoint_configuration_has_a_contract():
+    """The meta-guarantee: the dataflow × impl × coalesce × scheduled grid
+    of public aggregate entrypoints is FULLY covered — a new configuration
+    added without a budget fails here before it ships uncounted traffic."""
+    from repro.analysis.contracts import CONTRACTS
+
+    expected = _expected_contract_grid()
+    missing = expected - set(CONTRACTS)
+    extra = set(CONTRACTS) - expected
+    assert not missing, f"configurations without a contract: {sorted(missing)}"
+    assert not extra, (f"contracts outside the declared grid (extend "
+                       f"_expected_contract_grid): {sorted(extra)}")
+
+
+def test_contracts_budget_backward_where_training_runs():
+    """The differentiable fetch entrypoints — the ones training actually
+    grads through — budget fwd+bwd (the backward of the in-SSD dataflow is
+    in-SSD work). Scheduled variants never do: the scheduled axis is
+    collective/dispatch-neutral, pinned by the forward budget alone.
+    (train_step needs no fwd_bwd — its forward already CONTAINS the
+    backward; aggregate_edges/separate_fetch are forward-only twins.)"""
+    from repro.analysis.contracts import CONTRACTS
+
+    grad_families = ("aggregate_sampled/", "aggregate_multi/",
+                     "sage_forward/", "embed_lookup/cgtrans/")
+    for name, c in CONTRACTS.items():
+        if name.endswith("/sched"):
+            assert c.fwd_bwd is None, f"{name}: sched variants pin fwd only"
+        elif name.startswith(grad_families):
+            assert c.fwd_bwd is not None, f"{name} has no fwd+bwd budget"
+
+
+def test_sage_tables_agree_with_sage_contracts():
+    """SAGE_FETCH_* are the headline tables the coalesce tier and the bench
+    import — they must literally be slices of the sage_forward contracts."""
+    from repro.analysis.contracts import (CONTRACTS, SAGE_FETCH_COLLECTIVES,
+                                          SAGE_FETCH_DISPATCH)
+
+    for form in ("separate", "coalesced"):
+        fwd = CONTRACTS[f"sage_forward/{form}/xla"].forward
+        for coll, n in SAGE_FETCH_COLLECTIVES[form].items():
+            assert fwd[coll] == n, (form, coll)
+        for disp, n in SAGE_FETCH_DISPATCH[form].items():
+            assert fwd[disp] == n, (form, disp)
+
+
+def test_lint_cli_reports_ok_on_head():
+    """The CI gate end-to-end: scripts/lint.py --json exits 0 on HEAD with
+    a clean AST report. Contract verification is restricted to one cheap
+    entrypoint here — ci.sh --tier lint runs the full 39 separately."""
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "lint.py"), "--json",
+         "--contracts", "embed_lookup/baseline/xla"],
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["ok"] is True
+    assert report["ast"] == []
+    assert report["contracts"] == {"checked": 1, "failed": {}}

@@ -35,6 +35,8 @@ import numpy as np
 import pytest
 from _propcheck import given, settings, strategies as st
 
+from repro.analysis.contracts import (SAGE_FETCH_DISPATCH,
+                                      SAGE_FETCH_KERNEL_SCATTERS_FWD_BWD)
 from repro.core import cgtrans, gas
 
 FLOWS = ("cgtrans", "baseline")
@@ -275,22 +277,26 @@ def test_dispatch_counts_halve(rng, impl):
         jax.make_jaxpr(loss_sep)(feats)
     with gas.count_dispatches() as coa_f:
         jax.make_jaxpr(loss_coa)(feats)
-    # forward: finds 2 → 1; the K=1 segment stays a pure find (its reduce
-    # count is 0), so exactly one seed reduction runs either way
-    assert sep_f["find"] == 2 and coa_f["find"] == 1, (sep_f, coa_f)
-    assert sep_f["reduce"] == 1 and coa_f["reduce"] == 1, (sep_f, coa_f)
+    # the budgets come from analysis/contracts.py — the SINGLE source of
+    # truth (finds 2 → 1; the K=1 segment stays a pure find, so exactly
+    # one seed reduction runs either way)
+    for key, counts in (("separate", sep_f), ("coalesced", coa_f)):
+        for disp, want in SAGE_FETCH_DISPATCH[key].items():
+            assert counts[disp] == want, (key, disp, dict(counts))
 
     with gas.count_dispatches() as sep_g:
         jax.make_jaxpr(jax.grad(loss_sep))(feats)
     with gas.count_dispatches() as coa_g:
         jax.make_jaxpr(jax.grad(loss_coa))(feats)
-    assert sep_g["find"] == 2 and coa_g["find"] == 1, (sep_g, coa_g)
+    assert sep_g["find"] == SAGE_FETCH_DISPATCH["separate"]["find"], sep_g
+    assert coa_g["find"] == SAGE_FETCH_DISPATCH["coalesced"]["find"], coa_g
     if impl == "pallas":
         # forward+backward kernel dispatches: the separate form pays one
         # fused forward scatter + TWO backward cotangent scatters (one per
         # gather); coalesced pays one forward + ONE backward
-        assert sep_g["kernel_scatter"] == 3, sep_g
-        assert coa_g["kernel_scatter"] == 2, coa_g
+        for key, counts in (("separate", sep_g), ("coalesced", coa_g)):
+            want = SAGE_FETCH_KERNEL_SCATTERS_FWD_BWD[key]
+            assert counts["kernel_scatter"] == want, (key, dict(counts))
 
 
 def test_k1_segment_stays_pure_find(rng):
