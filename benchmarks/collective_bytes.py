@@ -41,6 +41,12 @@ Measurements per run:
   go 2 → 1; pallas fwd+bwd kernel scatters go 3 → 2 (one backward cotangent
   scatter instead of two). Asserted by the exit code via
   ``check_coalesce_rows``.
+* ``serving``/``serving_cache`` rows — the online serving engine, counted:
+  a queue of N concurrent single-seed callers drains as ONE fused command
+  block (finds-per-query 1/N, mesh collectives-per-query 2/N, bit-exact
+  with the one-query-one-dispatch baseline) and the hot-vertex cache hit
+  rate on a deterministic hot-set replay. Asserted by the exit code via
+  ``check_serving_rows`` against the ``SERVE_FETCH_*`` contract tables.
 
 Interpret-mode caveat: off-TPU the kernel runs in the Pallas interpreter,
 which pays a fixed emulation cost per grid round and per dispatch; treat
@@ -330,6 +336,155 @@ def check_coalesce_rows(rows) -> list:
     return failures
 
 
+def bench_serving(ways: int = 8, V: int = 64, F: int = 16,
+                  fanout: int = 10) -> list:
+    """Online serving, counted the way it is claimed: a queue of N
+    concurrent single-seed callers drains as ONE fused ``aggregate_multi``
+    command block vs the one-query-one-dispatch baseline (same requests,
+    same neighbor samples). Rows record
+
+    * finds-per-query (``gas.count_dispatches`` on the executed drain):
+      fused 1/N vs naive 1;
+    * collectives-per-query (jaxpr-level all_gather/all_to_all on the
+      8-way mesh trace of the exact same blocks): fused 2/N vs naive 2;
+    * bit-exactness of the fused scatter-back against the baseline;
+    * the hot-vertex cache hit rate on a deterministic hot-set replay
+      (4 waves over the same seeds — wave 1 fills, waves 2–4 hit).
+
+    Asserted by the exit code via ``check_serving_rows`` against the
+    ``SERVE_FETCH_*`` budget tables in ``repro.analysis.contracts``.
+    """
+    from repro.analysis.contracts import SERVE_CONTRACT_N
+    from repro.launch.jaxpr_stats import collective_counts
+    from repro.serving import ServingEngine
+
+    n = SERVE_CONTRACT_N
+    g = uniform_graph(V, 6 * V, seed=5)
+    indptr, indices, _ = g.to_csr()
+    rng = np.random.default_rng(7)
+    feats = rng.integers(-5, 6, (V, F)).astype(np.float32)
+    seeds = [int(s) for s in rng.integers(0, V, n)]
+
+    # the executed drains run un-sharded (the find counters and the
+    # bit-exactness claim are mesh-independent); the collective counts come
+    # from the ABSTRACT mesh trace of the identical blocks below
+    rows, results = [], {}
+    engines = {}
+    for form, fuse in (("fused", True), ("naive_per_query", False)):
+        eng = ServingEngine(feats, indptr, indices, fanout=fanout,
+                            max_batch=n, fuse=fuse)
+        rids = [eng.submit([s], tenant=j) for j, s in enumerate(seeds)]
+        eng.flush()
+        results[form] = [eng.result(r) for r in rids]
+        engines[form] = eng
+
+    mesh = make_data_mesh(ways)
+    trace_eng = ServingEngine(feats, indptr, indices, fanout=fanout,
+                              max_batch=n, mesh=mesh)
+    for j, s in enumerate(seeds):
+        trace_eng.submit([s], tenant=j)
+    fn, fargs = trace_eng.fetch_callable()
+    fused_colls = collective_counts(fn, *fargs)
+    blocks = fargs[1]
+
+    def naive_trace(f, blocks_):
+        outs = []
+        for j in range(n):
+            outs.extend(cgtrans.aggregate_multi(
+                f, blocks_[2 * j:2 * j + 2], mesh=mesh, dataflow="cgtrans"))
+        return tuple(outs)
+
+    naive_colls = collective_counts(naive_trace, fargs[0], blocks)
+
+    bitexact = all(
+        np.array_equal(a.self_rows, b.self_rows)
+        and np.array_equal(a.agg_rows, b.agg_rows)
+        for a, b in zip(results["fused"], results["naive_per_query"]))
+    for form, colls in (("fused", fused_colls),
+                        ("naive_per_query", naive_colls)):
+        eng = engines[form]
+        rows.append({
+            "mode": "serving", "ways": ways, "form": form, "N": n,
+            "V": V, "F": F, "fanout": fanout,
+            "command_blocks": eng.stats["command_blocks"],
+            "finds": eng.stats["find"],
+            "finds_per_query": eng.finds_per_query(),
+            "all_gather": int(colls["all_gather"]),
+            "all_to_all": int(colls["all_to_all"]),
+            "collectives_per_query":
+                (colls["all_gather"] + colls["all_to_all"]) / n,
+            "bitexact_vs_naive": bool(bitexact),
+        })
+
+    # the hot-vertex cache: 4 waves over one hot seed set — wave 1 is all
+    # misses (and fills), waves 2–4 are all hits → hit_rate 0.75, counted
+    hot = [int(h) for h in rng.choice(V, n, replace=False)]
+    ceng = ServingEngine(feats, indptr, indices, fanout=fanout,
+                         max_batch=n, cache_capacity=2 * n)
+    waves = 4
+    for _ in range(waves):
+        for j, s in enumerate(hot):
+            ceng.submit([s], tenant=j)
+        ceng.flush()
+    snap = ceng.cache.snapshot()
+    rows.append({
+        "mode": "serving_cache", "ways": 1, "N": n, "waves": waves,
+        "V": V, "F": F, "capacity": ceng.cache.capacity,
+        "hits": snap["hits"], "misses": snap["misses"],
+        "hit_rate": snap["hit_rate"],
+        "finds_per_query": ceng.finds_per_query(),
+    })
+    return rows
+
+
+def check_serving_rows(rows) -> list:
+    """The serving mechanism, asserted deterministically (counters, never
+    clocks). Returns failure strings (empty = the claims hold). Budgets
+    come from the ``SERVE_FETCH_*`` tables in ``repro.analysis.contracts``
+    — the same single source the serve test tier and the lint contracts
+    pin — so the bench can never drift from them."""
+    from repro.analysis.contracts import (SERVE_CONTRACT_N,
+                                          SERVE_FETCH_COLLECTIVES,
+                                          SERVE_FETCH_FINDS)
+
+    by = {r["form"]: r for r in rows if r["mode"] == "serving"}
+    cache_rows = [r for r in rows if r["mode"] == "serving_cache"]
+    failures = []
+    f, nv = by["fused"], by["naive_per_query"]
+    n = f["N"]
+    if n < SERVE_CONTRACT_N:
+        failures.append(f"serving rows must batch N >= {SERVE_CONTRACT_N} "
+                        f"concurrent requests, saw N={n}")
+    if f["command_blocks"] != 1:
+        failures.append(f"a fused drain of {n} requests must dispatch ONE "
+                        f"command block, saw {f['command_blocks']}")
+    if f["finds"] != SERVE_FETCH_FINDS["fused"]:
+        failures.append(f"fused drain must issue "
+                        f"{SERVE_FETCH_FINDS['fused']} find, saw "
+                        f"{f['finds']}")
+    if nv["finds"] != SERVE_FETCH_FINDS["naive_per_query"] * n:
+        failures.append(f"naive baseline must issue one find per query "
+                        f"({n}), saw {nv['finds']}")
+    for coll, want in SERVE_FETCH_COLLECTIVES["fused"].items():
+        if f[coll] != want:
+            failures.append(f"fused drain must trace {want} {coll}, saw "
+                            f"{f[coll]}")
+    for coll, per_q in SERVE_FETCH_COLLECTIVES["naive_per_query"].items():
+        if nv[coll] != per_q * n:
+            failures.append(f"naive baseline must trace {per_q} {coll} per "
+                            f"query ({per_q * n} total), saw {nv[coll]}")
+    for key in ("finds_per_query", "collectives_per_query"):
+        if not f[key] < nv[key]:
+            failures.append(f"fused {key} ({f[key]:.3f}) not strictly below "
+                            f"the naive baseline ({nv[key]:.3f})")
+    if not f["bitexact_vs_naive"]:
+        failures.append("fused scatter-back diverged from the sequential "
+                        "per-request baseline (must be bit-exact)")
+    if not cache_rows or cache_rows[0]["hits"] <= 0:
+        failures.append("hot-vertex cache replay recorded zero hits")
+    return failures
+
+
 def bench_train_step_time(ways: int = 8) -> list:
     """Wall time of one jitted GraphSAGE+CGTrans TRAIN step on the sharded
     mesh, impl="xla" vs impl="pallas" scheduled/unscheduled — the
@@ -460,6 +615,24 @@ def main(argv=None) -> int:
             print(f"coalesce_grad/pallas {r['form']:<9s} "
                   f"finds={r['finds']} kernel_scatters={r['kernel_scatters']}")
 
+    # online serving, counted: N concurrent callers drain as ONE fused
+    # command block — finds-per-query 1/N, collectives-per-query 2/N,
+    # bit-exact with the per-request baseline; plus the hot-cache replay
+    serving_rows = bench_serving(8)
+    for r in serving_rows:
+        rows.append(r)
+        if r["mode"] == "serving":
+            print(f"serving/{r['form']:<15s} N={r['N']} "
+                  f"blocks={r['command_blocks']} "
+                  f"finds/q={r['finds_per_query']:.3f} "
+                  f"colls/q={r['collectives_per_query']:.3f} "
+                  f"bitexact={r['bitexact_vs_naive']}")
+        else:
+            print(f"serving_cache N={r['N']}x{r['waves']}waves "
+                  f"hits={r['hits']}/{r['hits'] + r['misses']} "
+                  f"hit_rate={r['hit_rate']:.2f} "
+                  f"finds/q={r['finds_per_query']:.3f}")
+
     # one full train step (fwd + bwd + AdamW): the differentiable pallas
     # path vs the xla oracle — the backward also runs through the kernel
     for r in bench_train_step_time(8):
@@ -507,6 +680,17 @@ def main(argv=None) -> int:
         "coalesce_collectives_coalesced":
             co[("cgtrans", "coalesced")]["all_gather"]
             + co[("cgtrans", "coalesced")]["all_to_all"],
+        # the serving headline: per-query amortization at N concurrent
+        # callers, plus what the hot cache removes on the skewed replay
+        "serving_finds_per_query": {
+            r["form"]: r["finds_per_query"] for r in serving_rows
+            if r["mode"] == "serving"},
+        "serving_collectives_per_query": {
+            r["form"]: r["collectives_per_query"] for r in serving_rows
+            if r["mode"] == "serving"},
+        "serving_cache_hit_rate": next(
+            r["hit_rate"] for r in serving_rows
+            if r["mode"] == "serving_cache"),
     }
     # the scheduler mechanism, asserted DETERMINISTICALLY (round counts,
     # not wall times — timing on this topology is an estimator, the counts
@@ -527,6 +711,8 @@ def main(argv=None) -> int:
             f"unscheduled occupancy ({cu['live_rounds']})")
     # the coalescing mechanism, asserted the same way (counters, not clocks)
     mech_failures += check_coalesce_rows(coalesce_rows)
+    # and the serving mechanism: fused command blocks + hot cache
+    mech_failures += check_serving_rows(serving_rows)
 
     out = {"jax_version": jax.__version__, "devices": n_dev,
            "rows": rows, "summary": summary}

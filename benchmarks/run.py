@@ -193,6 +193,17 @@ def bench_collective_bytes(fast=False):
         elif r["mode"] == "coalesce_grad":
             print(f"coalesce_grad_{r['form']},0.0,"
                   f"finds={r['finds']};kernel_scatters={r['kernel_scatters']}")
+        elif r["mode"] == "serving":
+            print(f"serving_{r['form']},0.0,"
+                  f"N={r['N']};blocks={r['command_blocks']};"
+                  f"finds_per_query={r['finds_per_query']:.3f};"
+                  f"collectives_per_query={r['collectives_per_query']:.3f};"
+                  f"bitexact={r['bitexact_vs_naive']}")
+        elif r["mode"] == "serving_cache":
+            print(f"serving_cache,0.0,"
+                  f"hits={r['hits']}/{r['hits'] + r['misses']};"
+                  f"hit_rate={r['hit_rate']:.2f};"
+                  f"finds_per_query={r['finds_per_query']:.3f}")
     s = data["summary"]
     print(f"collective_bytes_summary,0.0,"
           f"{s['checked'] - s['failed']}/{s['checked']}_rows_pass;"
@@ -200,7 +211,11 @@ def bench_collective_bytes(fast=False):
           f"agg_sched_vs_xla={s.get('agg_pallas_sched_vs_xla', 0.0):.2f};"
           f"coalesce_collectives="
           f"{s.get('coalesce_collectives_separate', '?')}to"
-          f"{s.get('coalesce_collectives_coalesced', '?')}")
+          f"{s.get('coalesce_collectives_coalesced', '?')};"
+          f"serving_finds_per_query="
+          f"{s.get('serving_finds_per_query', {}).get('fused', '?')};"
+          f"serving_cache_hit_rate="
+          f"{s.get('serving_cache_hit_rate', '?')}")
 
 
 def bench_kernels(fast=False):

@@ -17,6 +17,10 @@
 #                                        # one SSD command block ≡ two
 #                                        # separate streams (values, grads,
 #                                        # collective/dispatch counters)
+#   scripts/ci.sh --tier serve           # the online-serving tier: fused
+#                                        # cross-request command blocks ≡
+#                                        # per-request dispatch, triggers,
+#                                        # hot cache, tenant scatter-back
 #   scripts/ci.sh --tier lint            # the static-analysis tier:
 #                                        # scripts/lint.py (AST rules +
 #                                        # abstract-traced dataflow
@@ -33,7 +37,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # every lane the workflow matrix runs; `full` is tier-1 (the workflow passes
 # it `-m "not distributed"` — the subprocess cases already run one-per-lane)
-TIERS=(pallas grad sched coalesce lint full)
+TIERS=(pallas grad sched coalesce serve lint full)
 
 TIER="full"
 # seeded with the always-on flags so the array is never empty: the classic
@@ -93,6 +97,15 @@ case "$TIER" in
     # (finds 2 → 1, backward scatters 2 → 1, collectives 2 → 1 on-mesh).
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
       python -m pytest "${ARGS[@]}" tests/test_cgtrans_coalesce.py
+    ;;
+  serve)
+    # the online-serving tier: cross-request fused command blocks ≡
+    # sequential per-request dispatch bit-exact, the size-or-deadline
+    # trigger, hot-vertex cache row fidelity + hit counters, tenant
+    # scatter-back isolation, and the counted finds/collectives-per-query
+    # ratios (the sharded cells run on the fake 8-device topology).
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+      python -m pytest "${ARGS[@]}" tests/test_serving.py
     ;;
   lint)
     # the static-analysis tier: both lint layers over the repo (lint.py

@@ -74,6 +74,29 @@ SAGE_FETCH_KERNEL_SCATTERS_FWD_BWD: Dict[str, int] = {
     "separate": 3, "coalesced": 2,
 }
 
+#: the SERVING headline (``repro.serving.ServingEngine``): one drained batch
+#: of N concurrent requests — each a K=1 self-row lookup segment + a fan-out
+#: aggregation segment, tenant-tagged — fuses into ONE command block whose
+#: collective count is INDEPENDENT of N, where the one-query-one-dispatch
+#: baseline pays the same pair PER QUERY. Collectives-per-query: 1/N vs 1.
+SERVE_FETCH_COLLECTIVES: Dict[str, Dict[str, int]] = {
+    "fused": {"all_gather": 1, "all_to_all": 1},          # per DRAIN, any N
+    "naive_per_query": {"all_gather": 1, "all_to_all": 1},  # per QUERY
+}
+
+#: GAS finds of the same pair: the fused drain issues ONE combined table
+#: gather for every segment of every caller; the naive baseline issues one
+#: per query. (Each caller's fan-out segment still reduces separately —
+#: reduces scale with N in BOTH forms, finds do not.)
+SERVE_FETCH_FINDS: Dict[str, int] = {
+    "fused": 1,                 # per drain, any N
+    "naive_per_query": 1,       # per query
+}
+
+#: concurrency of the committed serving contract fixtures (the bench and the
+#: serving tier assert the same N so the three surfaces can't drift)
+SERVE_CONTRACT_N = 8
+
 
 @dataclasses.dataclass(frozen=True)
 class DataflowContract:
@@ -252,6 +275,57 @@ def _build_separate_fetch(flow: str, impl: str):
                     cgtrans.aggregate_sampled(f, nb2, mk2, mesh=mesh,
                                               dataflow=flow, impl=impl))
         return fn, (feats, (b1, b2))
+    return build
+
+
+def _serve_blocks(n_requests: int):
+    """The serving-engine drain fixture: ``n_requests`` concurrent
+    single-seed callers, each contributing a K=1 self-row lookup segment +
+    a fan-out aggregation segment (the exact block layout
+    ``ServingEngine._build_blocks`` emits, one row per shard after its
+    pad-to-shard-multiple step)."""
+    import jax.numpy as jnp
+    feats = _sds((_WAYS, _PART, _F), jnp.float32)
+    blocks = []
+    for _ in range(n_requests):
+        blocks.append((_sds((_WAYS, 1, 1), jnp.int32),
+                       _sds((_WAYS, 1, 1), jnp.bool_)))
+        blocks.append((_sds((_WAYS, 1, _K2), jnp.int32),
+                       _sds((_WAYS, 1, _K2), jnp.bool_)))
+    return feats, tuple(blocks)
+
+
+def _build_serving_fused(impl: str, n_requests: int):
+    def build():
+        from repro.core import cgtrans
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(_WAYS)
+        feats, blocks = _serve_blocks(n_requests)
+
+        def fn(f, blocks_):
+            return cgtrans.aggregate_multi(f, blocks_, mesh=mesh,
+                                           dataflow="cgtrans", impl=impl)
+        return fn, (feats, blocks)
+    return build
+
+
+def _build_serving_naive(impl: str, n_requests: int):
+    """The one-query-one-dispatch twin: the SAME segment pairs issued as
+    one command block per caller."""
+    def build():
+        from repro.core import cgtrans
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(_WAYS)
+        feats, blocks = _serve_blocks(n_requests)
+
+        def fn(f, blocks_):
+            outs = []
+            for j in range(n_requests):
+                outs.extend(cgtrans.aggregate_multi(
+                    f, blocks_[2 * j:2 * j + 2], mesh=mesh,
+                    dataflow="cgtrans", impl=impl))
+            return tuple(outs)
+        return fn, (feats, blocks)
     return build
 
 
@@ -458,6 +532,37 @@ for _flow in ("cgtrans", "baseline"):
             fwd_bwd=None,
             note="the UN-coalesced twin of aggregate_multi — the pair pins "
                  "the 2 → 1 coalescing claim as two committed budgets"))
+
+# -- serving_fetch: the cross-request fused drain ----------------------------
+# the online engine's headline as a lint-time budget: a drain of
+# SERVE_CONTRACT_N concurrent callers traces ONE all_gather + ONE
+# all_to_all + ONE find — collectives- and finds-per-query 1/N — while the
+# one-query-one-dispatch twin pays the full pair N times. Reduces (and
+# pallas kernel scatters) are per fan-out segment in BOTH forms: batching
+# amortizes the *transmission*, never the per-caller aggregation math.
+# Forward-only: serving is inference (no training family differentiates it).
+for _impl in ("xla", "pallas"):
+    _ksN = ({"kernel_scatter": SERVE_CONTRACT_N}
+            if _impl == "pallas" else {})
+    _register(DataflowContract(
+        name=f"serving_fetch/fused/{_impl}",
+        build=_build_serving_fused(_impl, SERVE_CONTRACT_N),
+        forward=_merge(SERVE_FETCH_COLLECTIVES["fused"],
+                       {"find": SERVE_FETCH_FINDS["fused"],
+                        "reduce": SERVE_CONTRACT_N}, _ksN),
+        note=f"one drain of N={SERVE_CONTRACT_N} tenant-tagged request "
+             f"pairs — the collective pair is N-independent"))
+    _register(DataflowContract(
+        name=f"serving_fetch/naive/{_impl}",
+        build=_build_serving_naive(_impl, SERVE_CONTRACT_N),
+        forward=_merge(
+            {k: v * SERVE_CONTRACT_N
+             for k, v in SERVE_FETCH_COLLECTIVES["naive_per_query"].items()},
+            {"find": SERVE_FETCH_FINDS["naive_per_query"] * SERVE_CONTRACT_N,
+             "reduce": SERVE_CONTRACT_N}, _ksN),
+        note="the one-query-one-dispatch twin: every caller pays the full "
+             "collective pair — the fused/naive budgets pin the serving "
+             "ratio as committed data"))
 
 # -- sage_forward: the deployed 2-layer fetch --------------------------------
 _SAGE_FWD = {

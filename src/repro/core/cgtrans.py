@@ -458,11 +458,19 @@ class SegmentDescriptor(NamedTuple):
                        id_offsets[i+1])``, so ``id_offsets[-1]`` is the
                        total id count);
     ``row_offsets``  — output-row offset of each segment (length S+1) in
-                       the concatenated (rows_tot, F) result block.
+                       the concatenated (rows_tot, F) result block;
+    ``tenants``      — per-segment OWNER tags (length S, or None for the
+                       single-caller case). A serving command block fuses
+                       request segments from several concurrent callers;
+                       the tenant tag is what scatters each segment's rows
+                       back to the caller that issued them and nobody else
+                       (``repro.serving`` is the consumer; the serving tier
+                       asserts results never cross callers).
     """
     shapes: Tuple[Tuple[int, int], ...]
     id_offsets: Tuple[int, ...]
     row_offsets: Tuple[int, ...]
+    tenants: Optional[Tuple[int, ...]] = None
 
     @property
     def n_ids(self) -> int:
@@ -472,19 +480,38 @@ class SegmentDescriptor(NamedTuple):
     def n_rows(self) -> int:
         return self.row_offsets[-1]
 
+    def segments_of(self, tenant: int) -> Tuple[int, ...]:
+        """Indices of the segments owned by ``tenant`` (in block order)."""
+        if self.tenants is None:
+            raise ValueError("descriptor carries no tenant tags")
+        return tuple(i for i, t in enumerate(self.tenants) if t == tenant)
 
-def segment_descriptor(shapes: Sequence[Tuple[int, int]]) -> SegmentDescriptor:
-    """Build the descriptor for segments of static (rows_i, K_i) shapes."""
+
+def segment_descriptor(shapes: Sequence[Tuple[int, int]],
+                       tenants: Optional[Sequence[int]] = None
+                       ) -> SegmentDescriptor:
+    """Build the descriptor for segments of static (rows_i, K_i) shapes.
+
+    ``tenants`` (optional) tags each segment with the caller that owns it —
+    the cross-request serving engine fuses many callers' segments into one
+    command block and uses the tags to scatter results back per caller.
+    """
     shapes = tuple((int(r), int(k)) for r, k in shapes)
     if not shapes:
         raise ValueError("a request block needs at least one segment")
     if any(r < 1 or k < 1 for r, k in shapes):
         raise ValueError(f"degenerate segment in {shapes}")
+    if tenants is not None:
+        tenants = tuple(int(t) for t in tenants)
+        if len(tenants) != len(shapes):
+            raise ValueError(
+                f"tenant tags ({len(tenants)}) must match segments "
+                f"({len(shapes)})")
     ids, rows = [0], [0]
     for r, k in shapes:
         ids.append(ids[-1] + r * k)
         rows.append(rows[-1] + r)
-    return SegmentDescriptor(shapes, tuple(ids), tuple(rows))
+    return SegmentDescriptor(shapes, tuple(ids), tuple(rows), tenants)
 
 
 def _encode_requests(blocks):

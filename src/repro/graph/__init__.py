@@ -1,11 +1,13 @@
 from repro.graph.partition import PartitionedGraph, partition_by_src
-from repro.graph.sampling import device_sample, host_sample
+from repro.graph.sampling import (device_sample, host_sample,
+                                  host_sample_csr)
 from repro.graph.structure import COOGraph
 from repro.graph.synthetic import (TABLE_II, clustered_graph, rmat,
                                   table2_like, uniform_graph)
 
 __all__ = [
     "PartitionedGraph", "partition_by_src", "device_sample", "host_sample",
+    "host_sample_csr",
     "COOGraph", "TABLE_II", "clustered_graph", "rmat", "table2_like",
     "uniform_graph",
 ]

@@ -7,7 +7,17 @@ load balance, and it is also what makes the device-side aggregation a
 fixed-shape segment reduction.
 
 Both a host (numpy, data-pipeline) and a device (jax, on-accelerator) sampler
-are provided; they draw from the same CSR view.
+are provided; they draw from the same CSR view and share one semantic
+contract:
+
+* every returned sample is VALID (mask all-True): an isolated vertex
+  aggregates ITSELF — its row repeats across the fan-out, so a masked mean
+  returns its own features rather than the reduction identity (0), which is
+  what a lookup-style serving query expects;
+* a sampled offset never escapes its vertex's CSR range: the device sampler
+  clamps ``int(u · deg)`` at ``deg - 1`` (``_fanout_offsets``), so even a
+  uniform draw that rounds to 1.0 can't select the first neighbor of the
+  NEXT vertex's range.
 """
 
 from __future__ import annotations
@@ -24,32 +34,61 @@ from repro.graph.structure import COOGraph
 def host_sample(g: COOGraph, seeds: np.ndarray, fanout: int,
                 *, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
     """Returns (neighbors (B, fanout) int32, mask (B, fanout) bool)."""
-    rng = np.random.default_rng(seed)
     indptr, indices, _ = g.to_csr()
+    return host_sample_csr(indptr, indices, seeds, fanout, seed=seed)
+
+
+def host_sample_csr(indptr: np.ndarray, indices: np.ndarray,
+                    seeds: np.ndarray, fanout: int,
+                    *, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """``host_sample`` on a raw CSR view (the serving engine samples at
+    request-submit time from the CSR it already holds, without a COOGraph
+    round-trip)."""
+    rng = np.random.default_rng(seed)
     B = seeds.shape[0]
     out = np.zeros((B, fanout), np.int32)
-    mask = np.zeros((B, fanout), bool)
+    mask = np.ones((B, fanout), bool)
     for i, s in enumerate(seeds):
         lo, hi = int(indptr[s]), int(indptr[s + 1])
         deg = hi - lo
         if deg == 0:
-            out[i] = s  # isolated vertex aggregates itself
-            continue
+            out[i] = s  # isolated vertex aggregates itself — and its
+            continue    # self-samples are VALID (mask True), not identity
         out[i] = indices[lo + rng.integers(0, deg, fanout)]
-        mask[i] = True
     return out, mask
+
+
+def _fanout_offsets(u: jax.Array, deg: jax.Array) -> jax.Array:
+    """(B, fanout) uniform draws × (B,) degrees → in-range neighbor offsets.
+
+    ``int(u · deg)`` lands in ``[0, deg]``: a float32 ``u`` close enough to
+    1.0 (or any upstream rounding that nudges ``u · deg`` up to ``deg``)
+    yields ``offs == deg`` — the first slot of the NEXT vertex's CSR range.
+    The clamp pins the edge case to the last real neighbor; degree-0 rows
+    produce offset 0 (the caller substitutes the seed itself).
+    """
+    deg1 = jnp.maximum(deg, 1).astype(jnp.int32)[:, None]
+    offs = (u * deg1).astype(jnp.int32)
+    return jnp.minimum(offs, deg1 - 1)
 
 
 def device_sample(indptr: jax.Array, indices: jax.Array, seeds: jax.Array,
                   fanout: int, key: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """On-device fixed-fan-out sampling from a CSR graph."""
+    """On-device fixed-fan-out sampling from a CSR graph.
+
+    Matches ``host_sample``'s semantics exactly: with-replacement draws are
+    always valid (mask all-True) and an isolated vertex self-aggregates —
+    its own id fills the fan-out. Offsets are range-clamped
+    (``_fanout_offsets``), so no draw can read past a vertex's CSR slice.
+    """
     lo = jnp.take(indptr, seeds)
     hi = jnp.take(indptr, seeds + 1)
     deg = (hi - lo).astype(jnp.int32)
     u = jax.random.uniform(key, (seeds.shape[0], fanout))
-    offs = (u * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
+    offs = _fanout_offsets(u, deg)
     idx = jnp.clip(lo[:, None] + offs, 0, indices.shape[0] - 1)
     nbrs = jnp.take(indices, idx)
-    mask = jnp.broadcast_to(deg[:, None] > 0, nbrs.shape)
-    nbrs = jnp.where(mask, nbrs, seeds[:, None])
+    has_nbrs = jnp.broadcast_to(deg[:, None] > 0, nbrs.shape)
+    nbrs = jnp.where(has_nbrs, nbrs, seeds[:, None])
+    mask = jnp.ones_like(has_nbrs)
     return nbrs.astype(jnp.int32), mask

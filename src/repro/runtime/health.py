@@ -38,7 +38,11 @@ class StepMonitor:
         if len(self.times) >= 8:
             med = sorted(self.times)[len(self.times) // 2]
             mad = sorted(abs(t - med) for t in self.times)[len(self.times) // 2]
-            sigma = max(1.4826 * mad, 1e-6)
+            # A window of identical step times has MAD = 0; flooring sigma at
+            # only 1e-6 would then flag ANY nanosecond of jitter as a
+            # straggler. Floor at a fraction of the median too, so "slow"
+            # always means slow relative to the typical step.
+            sigma = max(1.4826 * mad, 0.05 * med, 1e-6)
             if (seconds - med) / sigma > self.z:
                 is_bad = True
                 self.flagged += 1
@@ -73,6 +77,11 @@ class Heartbeat:
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
         with open(self.path, "w") as f:
             f.write(str(time.time()))
+
+    def touch(self) -> None:
+        """Synchronous liveness update — for event-driven loops (the serving
+        engine beats once per dispatch) instead of the timer thread."""
+        self._touch()
 
     def stop(self) -> None:
         self._stop.set()

@@ -1,0 +1,13 @@
+"""Online serving: cross-request coalesced SSD command blocks.
+
+The paper's command-queue batching promoted to the serving front door —
+see ``repro.serving.engine`` for the claims and ``launch/serve.py
+--workload graph`` for the runnable loop.
+"""
+
+from repro.serving.cache import HotVertexCache
+from repro.serving.engine import ServeResult, ServingEngine
+from repro.serving.queue import RequestQueue, ServeRequest
+
+__all__ = ["HotVertexCache", "RequestQueue", "ServeRequest", "ServeResult",
+           "ServingEngine"]

@@ -273,6 +273,9 @@ def _expected_contract_grid():
                 grid.add(f"aggregate_edges/{flow}/{op}/{impl}")
     grid |= {"embed_lookup/cgtrans/xla", "embed_lookup/cgtrans/pallas",
              "embed_lookup/baseline/xla"}
+    for form in ("fused", "naive"):
+        for impl in ("xla", "pallas"):
+            grid.add(f"serving_fetch/{form}/{impl}")
     return grid
 
 
@@ -325,7 +328,7 @@ def test_sage_tables_agree_with_sage_contracts():
 def test_lint_cli_reports_ok_on_head():
     """The CI gate end-to-end: scripts/lint.py --json exits 0 on HEAD with
     a clean AST report. Contract verification is restricted to one cheap
-    entrypoint here — ci.sh --tier lint runs the full 39 separately."""
+    entrypoint here — ci.sh --tier lint runs the full 43 separately."""
     proc = subprocess.run(
         [sys.executable, str(REPO / "scripts" / "lint.py"), "--json",
          "--contracts", "embed_lookup/baseline/xla"],

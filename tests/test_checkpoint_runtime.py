@@ -65,6 +65,23 @@ def test_step_monitor_flags_stragglers():
     assert not mon.record(21, 0.101)
 
 
+def test_step_monitor_constant_stream_tolerates_jitter():
+    """MAD = 0 degeneracy: a window of IDENTICAL step times used to floor
+    sigma at 1e-6, so a nanosecond of jitter z-scored in the thousands and
+    flagged a straggler. With the median-fraction floor, sub-5%-of-median
+    jitter must flag nothing."""
+    mon = StepMonitor(z_threshold=4.0)
+    for i in range(32):
+        assert not mon.record(i, 0.100)          # perfectly constant window
+    # nanosecond-to-microsecond jitter: well inside 5% of the median
+    for i, jit in enumerate((1e-9, 5e-8, 1e-6, 2e-4)):
+        assert not mon.record(32 + i, 0.100 + jit), f"flagged jitter {jit}"
+    assert mon.flagged == 0
+    # a REAL straggler on the constant stream still flags: 4·(0.05·med) above
+    assert mon.record(100, 0.100 + 4.5 * 0.05 * 0.100)
+    assert mon.flagged == 1
+
+
 def test_heartbeat(tmp_path):
     path = str(tmp_path / "hb")
     hb = Heartbeat(path, interval_s=0.05)

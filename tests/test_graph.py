@@ -67,10 +67,13 @@ def test_host_sampler_neighbors_are_real(rng):
     indptr, indices, _ = g.to_csr()
     seeds = rng.integers(0, 50, 20).astype(np.int64)
     nbrs, mask = host_sample(g, seeds, 7, seed=1)
+    # with-replacement samples are always valid: mask is all-True and an
+    # isolated vertex self-aggregates (its own id fills the fan-out)
+    assert mask.all()
     for i, s in enumerate(seeds):
         real = set(indices[indptr[s]:indptr[s + 1]].tolist())
         for j in range(7):
-            if mask[i, j]:
+            if real:
                 assert int(nbrs[i, j]) in real
             else:
                 assert int(nbrs[i, j]) == s  # isolated → self
@@ -84,11 +87,103 @@ def test_device_sampler_matches_semantics(rng):
                                jnp.asarray(indices), seeds, 5,
                                jax.random.PRNGKey(0))
     nbrs, mask = np.asarray(nbrs), np.asarray(mask)
+    assert mask.all()
     for i, s in enumerate(np.asarray(seeds)):
         real = set(indices[indptr[s]:indptr[s + 1]].tolist())
         for j in range(5):
-            if mask[i, j]:
+            if real:
                 assert nbrs[i, j] in real
+            else:
+                assert nbrs[i, j] == s  # isolated → self
+
+
+def _isolated_graph():
+    """5 isolated vertices (0, 3, 7, 11, 15) among 16; the rest chain."""
+    isolated = {0, 3, 7, 11, 15}
+    src, dst = [], []
+    for u in range(16):
+        if u in isolated:
+            continue
+        for v in range(16):
+            if v not in isolated and v != u:
+                src.append(u)
+                dst.append(v)
+    return COOGraph(16, np.asarray(src, np.int32),
+                    np.asarray(dst, np.int32)), sorted(isolated)
+
+
+def test_samplers_self_aggregate_isolated_vertices():
+    """Both samplers give isolated vertices VALID self-samples, so a masked
+    mean over the fan-out returns their own features — not the reduction
+    identity 0 (the bug this pins: ``out[i] = s`` with ``mask[i] = False``
+    reduced isolated seeds to zeros)."""
+    g, isolated = _isolated_graph()
+    indptr, indices, _ = g.to_csr()
+    seeds = np.arange(16, dtype=np.int64)
+
+    h_nbrs, h_mask = host_sample(g, seeds, 4, seed=0)
+    d_nbrs, d_mask = device_sample(
+        jnp.asarray(indptr.astype(np.int32)), jnp.asarray(indices),
+        jnp.asarray(seeds.astype(np.int32)), 4, jax.random.PRNGKey(1))
+    d_nbrs, d_mask = np.asarray(d_nbrs), np.asarray(d_mask)
+
+    # host ≡ device on the semantic contract: all samples valid, and the
+    # isolated rows are exactly the seed id repeated
+    assert h_mask.all() and d_mask.all()
+    for s in isolated:
+        np.testing.assert_array_equal(h_nbrs[s], np.full(4, s))
+        np.testing.assert_array_equal(d_nbrs[s], np.full(4, s))
+    # downstream check — the masked mean of integer features returns the
+    # isolated vertex's OWN row bit-exactly
+    feats = np.arange(16, dtype=np.float32)[:, None] * np.ones((1, 3), np.float32)
+    agg = (feats[h_nbrs] * h_mask[..., None]).sum(1) / h_mask.sum(1)[:, None]
+    for s in isolated:
+        np.testing.assert_array_equal(agg[s], feats[s])
+
+
+def test_device_sampler_offsets_never_escape_csr_range():
+    """``int(u · deg)`` rounding to ``deg`` would select the first neighbor
+    of the NEXT vertex's CSR range; the ``_fanout_offsets`` clamp pins it to
+    the last real neighbor. Fed adversarial uniforms (u = 1.0 and the
+    largest representable f32 below 1) where the unclamped product lands
+    exactly on ``deg``."""
+    from repro.graph.sampling import _fanout_offsets
+
+    degs = jnp.asarray([1, 3, 7, 50, 1 << 20, (1 << 24) + 1], jnp.int32)
+    for u_val in (1.0, np.float32(1.0 - 2.0 ** -24)):
+        u = jnp.full((degs.shape[0], 4), u_val, jnp.float32)
+        offs = np.asarray(_fanout_offsets(u, degs))
+        unclamped = np.asarray((u * jnp.maximum(degs, 1)[:, None]
+                                ).astype(jnp.int32))
+        assert (offs < np.asarray(degs)[:, None]).all(), (u_val, offs)
+        assert (offs >= 0).all()
+        if u_val == 1.0:
+            # the adversarial draw really does fire the unclamped bug on
+            # every f32-representable degree (2^24 + 1 rounds DOWN in f32,
+            # so its product stays in range — the clamp still holds above)
+            rep = np.asarray(degs) == np.asarray(degs, np.float32)
+            assert rep.any()
+            assert (unclamped[rep] == np.asarray(degs)[rep, None]).all()
+
+
+def test_device_sampler_membership_with_sentinel_neighbors(rng):
+    """CSR-membership property: vertex v's range is followed by vertex
+    v+1's — a sampler that reads one slot past its range returns a sentinel
+    that belongs to the NEXT vertex. Build a two-vertex graph where every
+    out-neighbor of 0 is vertex 0 itself and vertex 1's single neighbor is
+    the sentinel 1; no sample of seed 0 may ever be 1."""
+    src = np.zeros(37, np.int32)          # deg(0) = 37 — not a power of two
+    dst = np.zeros(37, np.int32)          # all of 0's neighbors are 0
+    src = np.concatenate([src, np.asarray([1], np.int32)])
+    dst = np.concatenate([dst, np.asarray([1], np.int32)])   # the sentinel
+    g = COOGraph(2, src, dst)
+    indptr, indices, _ = g.to_csr()
+    for k in range(8):
+        nbrs, mask = device_sample(
+            jnp.asarray(indptr.astype(np.int32)), jnp.asarray(indices),
+            jnp.asarray([0], jnp.int32), 64, jax.random.PRNGKey(k))
+        assert np.asarray(mask).all()
+        assert (np.asarray(nbrs) == 0).all(), "sampled the next row's slot"
 
 
 def test_table2_like_ratios():

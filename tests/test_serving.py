@@ -1,0 +1,381 @@
+"""Serving tier: cross-request fused command blocks (ci.sh --tier serve).
+
+The ``repro.serving.ServingEngine`` claims, asserted deterministically:
+
+1. **Fused ≡ sequential, bit-exact** — a drained batch of N concurrent
+   requests fused into ONE ``aggregate_multi`` command block returns every
+   caller exactly what its own one-query-one-dispatch block would have
+   (integer-valued features, so any cross-request contamination is a hard
+   mismatch), across impl × op and on the sharded mesh.
+2. **Counted ratios** — ``gas.count_dispatches``: the fused drain issues
+   ONE find for any N while the naive baseline issues N; on the 8-way mesh
+   the fused drain traces ONE all_gather + ONE all_to_all
+   (``launch.jaxpr_stats``), budgets imported from the ``SERVE_FETCH_*``
+   tables in ``analysis.contracts`` — the single source of truth the
+   ``serving_fetch/*`` lint contracts also pin.
+3. **Trigger semantics** — the queue dispatches on size OR deadline,
+   deterministic under an injected clock.
+4. **Hot-vertex cache** — a hit returns bit-exactly the rows an SSD find
+   returns, hits are masked out of the command block, and the LRU evicts.
+5. **Tenant scatter-back** — the extended ``SegmentDescriptor`` tags every
+   segment with its caller; results never cross callers.
+6. **Health surface** — every dispatch lands in the ``StepMonitor`` and
+   beats the ``Heartbeat``.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.analysis.contracts import (SERVE_CONTRACT_N,
+                                      SERVE_FETCH_COLLECTIVES,
+                                      SERVE_FETCH_FINDS)
+from repro.core import cgtrans
+from repro.graph import uniform_graph
+from repro.serving import HotVertexCache, RequestQueue, ServeRequest, \
+    ServingEngine
+
+pytestmark = pytest.mark.serving
+
+V, F = 64, 8
+
+
+def _graph_feats(rng):
+    g = uniform_graph(V, 6 * V, seed=3)
+    indptr, indices, _ = g.to_csr()
+    feats = rng.integers(-5, 6, (V, F)).astype(np.float32)
+    return indptr, indices, feats
+
+
+def _fake_clock(step=0.001):
+    t = [0.0]
+
+    def clock():
+        t[0] += step
+        return t[0]
+    return clock
+
+
+def _mk_engine(indptr, indices, feats, **kw):
+    kw.setdefault("fanout", 5)
+    kw.setdefault("max_batch", SERVE_CONTRACT_N)
+    kw.setdefault("clock", _fake_clock())
+    return ServingEngine(feats, indptr, indices, **kw)
+
+
+def _submit_batch(eng, seeds_list):
+    return [eng.submit(s, tenant=100 + j) for j, s in enumerate(seeds_list)]
+
+
+# ---------------------------------------------------------------------------
+# 1 + 2. fused ≡ sequential bit-exact, with counted finds-per-query
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("op", ["add", "max"])
+def test_fused_equals_sequential_bitexact(rng, impl, op):
+    indptr, indices, feats = _graph_feats(rng)
+    seeds_list = ([[int(s)] for s in rng.integers(0, V, SERVE_CONTRACT_N - 2)]
+                  + [rng.integers(0, V, 3).tolist(),
+                     rng.integers(0, V, 2).tolist()])     # mixed batch sizes
+    engines = {}
+    for fuse in (True, False):
+        eng = _mk_engine(indptr, indices, feats, impl=impl, op=op, fuse=fuse,
+                         max_batch=len(seeds_list))
+        rids = _submit_batch(eng, seeds_list)
+        assert eng.poll() == len(seeds_list)
+        engines[fuse] = (eng, [eng.result(r) for r in rids])
+
+    ef, rf = engines[True]
+    en, rn = engines[False]
+    for a, b in zip(rf, rn):
+        assert a.rid == b.rid and a.tenant == b.tenant
+        np.testing.assert_array_equal(a.self_rows, b.self_rows)
+        np.testing.assert_array_equal(a.agg_rows, b.agg_rows)
+
+    # the counted claim: ONE find per fused drain, one PER QUERY naively
+    n = len(seeds_list)
+    assert ef.stats["find"] == SERVE_FETCH_FINDS["fused"]
+    assert en.stats["find"] == SERVE_FETCH_FINDS["naive_per_query"] * n
+    assert ef.finds_per_query() < en.finds_per_query()
+    assert ef.stats["command_blocks"] == 1
+    assert en.stats["command_blocks"] == n
+    # batching amortizes the transmission, never the per-caller math
+    assert ef.stats["reduce"] == en.stats["reduce"] == n
+
+
+def test_self_rows_are_the_feature_rows(rng):
+    """The K=1 lookup segment really is a row fetch: every caller's
+    self_rows equal the feature table's rows for its seeds."""
+    indptr, indices, feats = _graph_feats(rng)
+    eng = _mk_engine(indptr, indices, feats)
+    seeds_list = [rng.integers(0, V, 2).tolist()
+                  for _ in range(SERVE_CONTRACT_N)]
+    rids = _submit_batch(eng, seeds_list)
+    eng.poll()
+    for rid, seeds in zip(rids, seeds_list):
+        np.testing.assert_array_equal(eng.result(rid).self_rows, feats[seeds])
+
+
+# ---------------------------------------------------------------------------
+# 3. trigger semantics (deterministic via the injected clock)
+# ---------------------------------------------------------------------------
+
+def test_size_trigger_fires_at_max_batch(rng):
+    indptr, indices, feats = _graph_feats(rng)
+    eng = _mk_engine(indptr, indices, feats, max_batch=4, max_delay_s=1e9)
+    for j in range(3):
+        eng.submit([j])
+        assert eng.poll() == 0          # below batch size, far from deadline
+    eng.submit([3])
+    assert eng.poll() == 4              # size trigger
+    assert len(eng.queue) == 0
+
+
+def test_deadline_trigger_fires_on_oldest_wait(rng):
+    indptr, indices, feats = _graph_feats(rng)
+    t = [0.0]
+    eng = _mk_engine(indptr, indices, feats, max_batch=64, max_delay_s=0.01,
+                     clock=lambda: t[0])
+    eng.submit([1])
+    t[0] = 0.005
+    assert eng.poll() == 0              # young request, small batch
+    eng.submit([2])
+    t[0] = 0.011                        # head-of-line passed the deadline
+    assert eng.poll() == 2              # the WHOLE pending batch goes out
+    assert eng.stats["command_blocks"] == 1
+
+
+def test_flush_dispatches_in_max_batch_chunks(rng):
+    indptr, indices, feats = _graph_feats(rng)
+    eng = _mk_engine(indptr, indices, feats, max_batch=4, max_delay_s=1e9)
+    rids = [eng.submit([j % V]) for j in range(10)]
+    assert eng.flush() == 10
+    assert eng.stats["command_blocks"] == 3     # 4 + 4 + 2
+    for r in rids:
+        eng.result(r)                           # everyone got an answer
+
+
+def test_queue_validation():
+    with pytest.raises(ValueError):
+        RequestQueue(max_batch=0)
+    with pytest.raises(ValueError):
+        RequestQueue(max_delay_s=-1.0)
+    q = RequestQueue(max_batch=2, clock=lambda: 0.0)
+    assert not q.ready() and q.oldest_wait == 0.0
+    q.push(ServeRequest(0, 0, np.asarray([1]), np.zeros((1, 2), np.int32),
+                        np.ones((1, 2), bool), 0.0))
+    assert not q.ready()
+
+
+# ---------------------------------------------------------------------------
+# 4. the hot-vertex cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_returns_same_rows_as_ssd_find(rng):
+    indptr, indices, feats = _graph_feats(rng)
+    eng = _mk_engine(indptr, indices, feats, max_batch=4, cache_capacity=16)
+    seeds = [3, 7, 9, 11]
+    first = [eng.submit([s]) for s in seeds]
+    eng.poll()
+    cold = [eng.result(r) for r in first]
+    second = [eng.submit([s]) for s in seeds]
+    eng.poll()
+    warm = [eng.result(r) for r in second]
+    for s, a, b in zip(seeds, cold, warm):
+        assert not a.from_cache.any() and b.from_cache.all()
+        # the hit rows ARE the find rows, bit for bit
+        np.testing.assert_array_equal(b.self_rows, a.self_rows)
+        np.testing.assert_array_equal(b.self_rows, feats[[s]])
+        # and the aggregation is untouched by the cache (fresh sample, but
+        # same semantics — its rows come from the SSD block either way)
+    snap = eng.cache.snapshot()
+    assert snap["hits"] == 4 and snap["misses"] == 4
+    assert snap["hit_rate"] == 0.5
+
+
+def test_cache_does_not_change_results_vs_uncached(rng):
+    """Cache on ≡ cache off, bit-exact — hits substitute rows a previous
+    find returned, and features are static at serve time."""
+    indptr, indices, feats = _graph_feats(rng)
+    outs = {}
+    for cap in (0, 8):
+        eng = _mk_engine(indptr, indices, feats, max_batch=4,
+                         cache_capacity=cap)
+        rids = []
+        for wave in range(3):                    # overlapping seed waves
+            rids += [eng.submit([(3 * wave + j) % 16]) for j in range(4)]
+        eng.flush()
+        outs[cap] = [eng.result(r) for r in rids]
+    for a, b in zip(outs[0], outs[8]):
+        np.testing.assert_array_equal(a.self_rows, b.self_rows)
+        np.testing.assert_array_equal(a.agg_rows, b.agg_rows)
+    assert not any(r.from_cache.any() for r in outs[0])
+    assert any(r.from_cache.any() for r in outs[8])
+
+
+def test_cache_lru_eviction_and_counters():
+    cache = HotVertexCache(2)
+    cache.fill(np.asarray([1, 2]), np.ones((2, 3), np.float32))
+    rows, hit = cache.lookup(np.asarray([1]), 3)     # 1 is now MRU
+    assert hit.all()
+    cache.fill(np.asarray([5]), np.zeros((1, 3), np.float32))
+    assert 1 in cache and 5 in cache and 2 not in cache   # LRU 2 evicted
+    assert cache.evictions == 1
+    rows, hit = cache.lookup(np.asarray([2, 5]), 3)
+    assert list(hit) == [False, True]
+    assert cache.hits == 2 and cache.misses == 1
+    with pytest.raises(ValueError):
+        HotVertexCache(0)
+
+
+# ---------------------------------------------------------------------------
+# 5. tenant scatter-back
+# ---------------------------------------------------------------------------
+
+def test_tenant_tags_ride_the_descriptor(rng):
+    indptr, indices, feats = _graph_feats(rng)
+    eng = _mk_engine(indptr, indices, feats, max_batch=4)
+    for j in range(4):
+        eng.submit([j], tenant=500 + j)
+    reqs = list(eng.queue._pending)
+    _, desc, _, _ = eng._build_blocks(reqs)
+    assert desc.tenants == (500, 500, 501, 501, 502, 502, 503, 503)
+    for j in range(4):
+        assert desc.segments_of(500 + j) == (2 * j, 2 * j + 1)
+    # descriptor-level validation
+    with pytest.raises(ValueError):
+        cgtrans.segment_descriptor([(2, 1), (2, 3)], tenants=[7])
+    with pytest.raises(ValueError):
+        cgtrans.segment_descriptor([(2, 1)]).segments_of(0)
+
+
+def test_tenant_scatter_back_never_crosses_callers(rng):
+    """Every caller in a fused batch receives exactly what a PRIVATE engine
+    (same sampling key) returns for its request — with per-caller DISTINCT
+    features on every seed row, any cross-tenant leak is a hard mismatch."""
+    indptr, indices, _ = _graph_feats(rng)
+    # make every row globally unique so no two callers can alias
+    feats = (np.arange(V, dtype=np.float32)[:, None] * 8
+             + np.arange(F, dtype=np.float32)[None, :] + 1.0)
+    eng = _mk_engine(indptr, indices, feats)
+    seeds_list = [rng.integers(0, V, 2).tolist()
+                  for _ in range(SERVE_CONTRACT_N)]
+    rids = _submit_batch(eng, seeds_list)
+    assert eng.poll() == SERVE_CONTRACT_N
+    for j, (rid, seeds) in enumerate(zip(rids, seeds_list)):
+        got = eng.result(rid)
+        assert got.tenant == 100 + j
+        # private replay: rid 0 of a fresh engine with sample_seed shifted
+        # to this request's key draws the identical neighbor sample
+        solo = _mk_engine(indptr, indices, feats, sample_seed=rid)
+        srid = solo.submit(seeds, tenant=got.tenant)
+        solo.flush()
+        want = solo.result(srid)
+        np.testing.assert_array_equal(got.self_rows, want.self_rows)
+        np.testing.assert_array_equal(got.agg_rows, want.agg_rows)
+
+
+# ---------------------------------------------------------------------------
+# 6. health wiring
+# ---------------------------------------------------------------------------
+
+def test_health_surface_records_every_dispatch(rng, tmp_path):
+    from repro.runtime.health import Heartbeat
+
+    indptr, indices, feats = _graph_feats(rng)
+    hb_path = str(tmp_path / "hb")
+    eng = _mk_engine(indptr, indices, feats, max_batch=2,
+                     heartbeat=Heartbeat(hb_path), cache_capacity=4)
+    assert not Heartbeat.is_alive(hb_path)
+    for j in range(4):
+        eng.submit([j])
+        eng.poll()
+    assert Heartbeat.is_alive(hb_path)
+    snap = eng.health_snapshot()
+    assert snap["stats"]["dispatches"] == 2
+    assert snap["monitor"]["steps"] == 2
+    assert snap["queue_depth"] == 0
+    assert 0.0 <= snap["cache"]["hit_rate"] <= 1.0
+    assert snap["finds_per_query"] == pytest.approx(2 / 4)
+
+
+def test_engine_input_validation(rng):
+    indptr, indices, feats = _graph_feats(rng)
+    eng = _mk_engine(indptr, indices, feats)
+    with pytest.raises(ValueError):
+        eng.submit([])
+    with pytest.raises(ValueError):
+        eng.submit([V])                  # out of range
+    with pytest.raises(ValueError):
+        ServingEngine(feats[None], indptr, indices)   # not (V, F)
+
+
+# ---------------------------------------------------------------------------
+# sharded cells: the collective counts on the fake 8-way mesh
+# ---------------------------------------------------------------------------
+
+_mesh_cells = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs the 8-device topology (ci.sh --tier serve sets XLA_FLAGS)")
+
+
+@_mesh_cells
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_mesh_fused_equals_sequential(rng, impl):
+    from repro.launch.mesh import make_data_mesh
+
+    indptr, indices, feats = _graph_feats(rng)
+    mesh = make_data_mesh(8)
+    seeds_list = [[int(s)] for s in rng.integers(0, V, SERVE_CONTRACT_N)]
+    res = {}
+    for fuse in (True, False):
+        eng = _mk_engine(indptr, indices, feats, mesh=mesh, impl=impl,
+                         fuse=fuse)
+        rids = _submit_batch(eng, seeds_list)
+        assert eng.poll() == SERVE_CONTRACT_N
+        res[fuse] = (eng, [eng.result(r) for r in rids])
+    for a, b in zip(res[True][1], res[False][1]):
+        np.testing.assert_array_equal(a.self_rows, b.self_rows)
+        np.testing.assert_array_equal(a.agg_rows, b.agg_rows)
+    assert res[True][0].stats["find"] == 1
+    assert res[False][0].stats["find"] == SERVE_CONTRACT_N
+
+
+@_mesh_cells
+def test_mesh_collectives_per_query_drop(rng):
+    """The acceptance headline on the mesh: a queue of N≥8 single-seed
+    requests dispatches ONE command block tracing ONE all_gather + ONE
+    all_to_all — collectives-per-query 1/N vs the baseline's 1 — with the
+    budgets imported from the contracts tables."""
+    from repro.launch.jaxpr_stats import collective_counts
+    from repro.launch.mesh import make_data_mesh
+
+    indptr, indices, feats = _graph_feats(rng)
+    mesh = make_data_mesh(8)
+    eng = _mk_engine(indptr, indices, feats, mesh=mesh)
+    for j in range(SERVE_CONTRACT_N):
+        eng.submit([int((7 * j) % V)], tenant=j)
+    reqs = list(eng.queue._pending)
+
+    fn, args = eng.fetch_callable(reqs)
+    fused = collective_counts(fn, *args)
+    for coll, want in SERVE_FETCH_COLLECTIVES["fused"].items():
+        assert fused[coll] == want, (coll, dict(fused))
+
+    # the naive trace: one command block per request
+    blocks = args[1]
+
+    def naive(f, blocks_):
+        outs = []
+        for j in range(SERVE_CONTRACT_N):
+            outs.extend(cgtrans.aggregate_multi(
+                f, blocks_[2 * j:2 * j + 2], mesh=mesh, dataflow="cgtrans"))
+        return tuple(outs)
+
+    base = collective_counts(naive, args[0], blocks)
+    for coll, per_q in SERVE_FETCH_COLLECTIVES["naive_per_query"].items():
+        assert base[coll] == per_q * SERVE_CONTRACT_N, (coll, dict(base))
+        # per-query strictly below the baseline
+        assert fused[coll] / SERVE_CONTRACT_N < per_q
