@@ -180,6 +180,36 @@ def main(argv=None) -> int:
             f"streams — the coalesce tier (ci.sh --tier coalesce) cannot "
             f"run: {e!r}")
 
+    # -- wire codecs (the compressed transport layer) ----------------------
+    # the wire tier (tests/test_wire.py, ci.sh --tier wire) ships quantized
+    # partials and delta-encoded id streams through the collectives; probe
+    # the pure codecs HERE (they need bitcast_convert_type over int8/int16,
+    # which a stripped backend can lack) so a broken codec fails with one
+    # message instead of a parity-matrix explosion
+    try:
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.core import wire
+
+        ids = jnp.array([[0, 5, -1, 3]], jnp.int32)
+        dec = wire.delta_decode_ids(wire.delta_encode_ids(ids))
+        assert bool((dec == ids).all()), dec
+        x = jnp.array([[1.0, -3.0, 256.0, float("inf")]], jnp.float32)
+        bf = wire.decode_payload(wire.encode_payload(x, "bf16"), "bf16")
+        assert bool((bf == x).all()), bf           # ints ≤ 256 + inf: exact
+        q = wire.decode_payload(wire.encode_payload(x, "int8"), "int8")
+        scale = np.asarray(wire.int8_row_scale(x))[..., None]
+        fin = np.isfinite(np.asarray(x))
+        err = np.abs(np.asarray(q) - np.asarray(x))[fin]
+        assert (err <= scale / 2 + 1e-6).all(), err.max()
+        rows.append(("wire codecs",
+                     "functional (delta ids exact, bf16 exact, int8 bounded)"))
+    except Exception as e:  # noqa: BLE001 — report, don't crash the report
+        rows.append(("wire codecs", "BROKEN"))
+        failures.append(
+            f"the compressed-wire codecs do not round-trip on this JAX — "
+            f"the wire tier (ci.sh --tier wire) cannot run: {e!r}")
+
     # -- abstract tracing through shard_map (the lint/contract layer) ------
     # scripts/lint.py verifies every DataflowContract by jax.make_jaxpr /
     # eval_shape over ShapeDtypeStruct args — traced through shard_map with

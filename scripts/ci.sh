@@ -25,6 +25,10 @@
 #                                        # scripts/lint.py (AST rules +
 #                                        # abstract-traced dataflow
 #                                        # contracts) plus its own test file
+#   scripts/ci.sh --tier wire            # the compressed-wire tier: codec
+#                                        # properties (delta ids, bf16,
+#                                        # int8 bounds) plus the on-mesh
+#                                        # bf16/int8 parity matrix
 #   scripts/ci.sh --list-tiers           # machine-readable lane list (one
 #                                        # per line) — .github/workflows/
 #                                        # ci.yml builds its job matrix
@@ -37,7 +41,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # every lane the workflow matrix runs; `full` is tier-1 (the workflow passes
 # it `-m "not distributed"` — the subprocess cases already run one-per-lane)
-TIERS=(pallas grad sched coalesce serve lint full)
+TIERS=(pallas grad sched coalesce serve lint wire full)
 
 TIER="full"
 # seeded with the always-on flags so the array is never empty: the classic
@@ -114,6 +118,15 @@ case "$TIER" in
     # meta-test). Everything here traces abstractly — no mesh execution.
     python scripts/lint.py
     python -m pytest "${ARGS[@]}" tests/test_analysis.py
+    ;;
+  wire)
+    # the compressed-wire tier: the codec property suite (delta id
+    # round-trips, bf16 bit-exactness on small integers, int8 error bounds
+    # + sentinel identities) runs on the host; the parity matrix (bf16 ≡
+    # f32 bit-exact on integer payloads, values AND grads, across both
+    # impls and all three ops) runs once in an 8-device subprocess that
+    # sets its own XLA_FLAGS, so no topology forcing is needed here.
+    python -m pytest "${ARGS[@]}" tests/test_wire.py
     ;;
   *)
     echo "unknown --tier '$TIER' (expected one of: ${TIERS[*]})" >&2

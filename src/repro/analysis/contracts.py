@@ -228,7 +228,7 @@ def _fetch_blocks():
     return feats, b1, b2
 
 
-def _build_sampled(flow: str, impl: str, scheduled: bool):
+def _build_sampled(flow: str, impl: str, scheduled: bool, wire: str = "f32"):
     def build():
         from repro.core import cgtrans
         from repro.launch.mesh import make_data_mesh
@@ -238,12 +238,12 @@ def _build_sampled(flow: str, impl: str, scheduled: bool):
         def fn(f, nb, mk):
             return cgtrans.aggregate_sampled(
                 f, nb, mk, mesh=mesh, dataflow=flow, impl=impl,
-                scheduled=scheduled)
+                scheduled=scheduled, wire=wire)
         return fn, (feats, nb2, mk2)
     return build
 
 
-def _build_multi(flow: str, impl: str, scheduled: bool):
+def _build_multi(flow: str, impl: str, scheduled: bool, wire: str = "f32"):
     def build():
         from repro.core import cgtrans
         from repro.launch.mesh import make_data_mesh
@@ -253,7 +253,7 @@ def _build_multi(flow: str, impl: str, scheduled: bool):
         def fn(f, blocks):
             return cgtrans.aggregate_multi(
                 f, blocks, mesh=mesh, dataflow=flow, impl=impl,
-                scheduled=scheduled)
+                scheduled=scheduled, wire=wire)
         return fn, (feats, (b1, b2))
     return build
 
@@ -295,7 +295,7 @@ def _serve_blocks(n_requests: int):
     return feats, tuple(blocks)
 
 
-def _build_serving_fused(impl: str, n_requests: int):
+def _build_serving_fused(impl: str, n_requests: int, wire: str = "f32"):
     def build():
         from repro.core import cgtrans
         from repro.launch.mesh import make_data_mesh
@@ -304,7 +304,8 @@ def _build_serving_fused(impl: str, n_requests: int):
 
         def fn(f, blocks_):
             return cgtrans.aggregate_multi(f, blocks_, mesh=mesh,
-                                           dataflow="cgtrans", impl=impl)
+                                           dataflow="cgtrans", impl=impl,
+                                           wire=wire)
         return fn, (feats, blocks)
     return build
 
@@ -408,7 +409,7 @@ def _build_embed(cgtrans: bool, impl: str):
     return build
 
 
-def _build_edges(flow: str, impl: str, op: str):
+def _build_edges(flow: str, impl: str, op: str, wire: str = "f32"):
     def build():
         import jax.numpy as jnp
         from repro.core import cgtrans
@@ -421,7 +422,8 @@ def _build_edges(flow: str, impl: str, op: str):
 
         def fn(f, src, dst, w, m):
             return cgtrans.aggregate_edges(f, src, dst, w, m, mesh=mesh,
-                                           dataflow=flow, impl=impl, op=op)
+                                           dataflow=flow, impl=impl, op=op,
+                                           wire=wire)
         return fn, args
     return build
 
@@ -617,7 +619,7 @@ _register(DataflowContract(
     build=_build_embed(True, "xla"),
     forward={"psum": 1},
     fwd_bwd={"psum": 2},
-    dtype_waivers=("accum",),
+    dtype_waivers=("accum", "narrow-wire"),
     note="bf16 transport by design (compute_dtype=bfloat16): the psum of "
          "bf16 partials is the compressed-wire precursor the ROADMAP "
          "tracks — transport narrow, accumulate-at-owner; waiver documents "
@@ -627,7 +629,7 @@ _register(DataflowContract(
     build=_build_embed(True, "pallas"),
     forward={"psum": 1},
     fwd_bwd={"psum": 2, "reduce": 1, "kernel_scatter": 1},
-    dtype_waivers=("accum",),
+    dtype_waivers=("accum", "narrow-wire"),
     note="same bf16-transport waiver; the VJP GAS-scatters the cotangent "
          "at the owner shard through the FAST-GAS kernel"))
 _register(DataflowContract(
@@ -658,6 +660,63 @@ for _flow in ("cgtrans", "baseline"):
                 name=f"aggregate_edges/{_flow}/{_op}/{_impl}",
                 build=_build_edges(_flow, _impl, _op),
                 forward=_merge(_EDGES_FWD[(_flow, _op)], _ks)))
+
+# -- compressed wire variants (repro.core.wire) ------------------------------
+# the narrow wire changes BYTES, never budgets: each variant's collective
+# and dispatch counts equal its f32 twin's (the codec wraps the same one
+# all_to_all, forward and backward — custom_vjp, cotangents take the same
+# wire; the delta-encoded id stream rides the same one all_gather). The ONE
+# exception is aggregate_edges op="add": quantized codes cannot sum on a
+# psum_scatter wire (int8 codes carry per-row scales), so the narrow wire
+# ships over all_to_all and accumulates in f32 locally — psum_scatter 1→0,
+# all_to_all 0→1, pinned here as its own budget. Every variant declares its
+# narrowness via the narrow-wire waiver — extend the waiver, never the rule.
+_WIRE_NOTE = ("narrow transport by design (repro.core.wire): int16 delta "
+              "ids on the all_gather, {w} partials on the all_to_all, f32 "
+              "accumulation on arrival — same budget as the f32 twin")
+for _w in ("bf16", "int8"):
+    _register(DataflowContract(
+        name=f"aggregate_sampled/cgtrans/xla/{_w}",
+        build=_build_sampled("cgtrans", "xla", False, wire=_w),
+        forward=_SAMPLED_FWD["cgtrans"],
+        fwd_bwd=_SAMPLED_BWD["cgtrans"],
+        dtype_waivers=("narrow-wire",),
+        note=_WIRE_NOTE.format(w=_w)))
+    _register(DataflowContract(
+        name=f"aggregate_multi/cgtrans/xla/{_w}",
+        build=_build_multi("cgtrans", "xla", False, wire=_w),
+        forward=_MULTI_FWD["cgtrans"],
+        fwd_bwd=_MULTI_BWD["cgtrans"],
+        dtype_waivers=("narrow-wire",),
+        note=_WIRE_NOTE.format(w=_w)))
+    _register(DataflowContract(
+        name=f"aggregate_edges/cgtrans/add/xla/{_w}",
+        build=_build_edges("cgtrans", "xla", "add", wire=_w),
+        forward={"all_to_all": 1, "find": 1, "reduce": 1},
+        dtype_waivers=("narrow-wire",),
+        note="the one budget a narrow wire changes: quantized partials "
+             "cannot sum ON the wire, so psum_scatter 1→0 / all_to_all "
+             "0→1 with local f32 accumulation — same bytes shape, ÷2 or "
+             "÷4 the width"))
+_register(DataflowContract(
+    name="aggregate_multi/cgtrans/pallas/bf16",
+    build=_build_multi("cgtrans", "pallas", False, wire="bf16"),
+    forward=_merge(_MULTI_FWD["cgtrans"], {"kernel_scatter": 1}),
+    fwd_bwd=_MULTI_BWD_PALLAS["cgtrans"],
+    dtype_waivers=("narrow-wire",),
+    note="the kernel path under the narrow wire: codec wraps the "
+         "collective only, so the FAST-GAS dispatch budget (fwd scatter + "
+         "bwd cotangent scatter) is untouched"))
+_register(DataflowContract(
+    name="serving_fetch/fused/xla/bf16",
+    build=_build_serving_fused("xla", SERVE_CONTRACT_N, wire="bf16"),
+    forward=_merge(SERVE_FETCH_COLLECTIVES["fused"],
+                   {"find": SERVE_FETCH_FINDS["fused"],
+                    "reduce": SERVE_CONTRACT_N}),
+    dtype_waivers=("narrow-wire",),
+    note=f"the serving drain on the bf16 wire (ServingEngine(wire=)): "
+         f"N={SERVE_CONTRACT_N} fused callers, collective pair still "
+         f"N-independent, bytes halved"))
 
 
 #: every (entrypoint, dataflow-or-form, impl) the meta-test asserts coverage

@@ -23,6 +23,16 @@ Three rules, each motivated by a repo invariant:
   numerically "in range" after a modular clip and therefore silently wrong.
   Unsigned values in *local arithmetic* (e.g. XLA's unsigned div idiom
   inside schedule math) are fine and not flagged.
+* ``narrow-wire`` — a sub-32-bit payload entering a collective (bf16/f16
+  partials, int8 quantized blocks, int16 delta-encoded id streams) is a
+  LOSSY or re-encoded transport and must be a declared decision, never an
+  accident: every contract whose dataflow compresses its wire
+  (``repro.core.wire``; ``embed_lookup``'s bf16 psum) carries
+  ``dtype_waivers=("narrow-wire", …)`` naming it. An unwaived narrow
+  collective means a cast leaked into a wire that claims f32 — exactly the
+  silent-precision-loss this tier exists to catch. Bools are exempt (the
+  baseline dataflow legitimately ships 1-bit ownership masks; there is no
+  narrower encoding to drift to).
 
 ``check_dtype_flow`` walks a jaxpr recursively through every sub-jaxpr
 (pjit/shard_map/scan/custom-vjp branches) — same traversal contract as
@@ -39,7 +49,7 @@ import jax.numpy as jnp
 from repro.compat import canonical_collective
 
 #: every rule this module can emit (contracts reference these in waivers)
-RULES = ("f64", "accum", "unsigned-wire")
+RULES = ("f64", "accum", "unsigned-wire", "narrow-wire")
 
 #: sum-accumulating primitives: reducing a narrow float through these
 #: accumulates in the narrow type (max/min are order statistics — no
@@ -92,6 +102,16 @@ def _is_narrow_float(dt) -> bool:
 
 def _is_unsigned(dt) -> bool:
     return jnp.issubdtype(dt, jnp.unsignedinteger)
+
+
+def _is_narrow_wire(dt) -> bool:
+    """Sub-32-bit non-bool payload: lossy/re-encoded on a collective unless
+    a contract declares it (bools are the baseline's legitimate 1-bit
+    ownership masks — nothing narrower exists to drift to)."""
+    if dt == jnp.bool_:
+        return False
+    itemsize = getattr(jnp.dtype(dt), "itemsize", 4)
+    return itemsize < 4
 
 
 def check_dtype_flow(jaxpr, *, waive: Sequence[str] = ()) -> List[DtypeIssue]:
@@ -158,6 +178,17 @@ def check_dtype_flow(jaxpr, *, waive: Sequence[str] = ()) -> List[DtypeIssue]:
                             "unsigned-wire", prim,
                             f"{idx[0][0]} index stream into {prim} — the "
                             f"dead-row convention needs id < 0 representable"))
+
+            if "narrow-wire" not in waived:
+                if canonical_collective(prim) is not None:
+                    for name, dt in in_avals:
+                        if _is_narrow_wire(dt):
+                            issues.append(DtypeIssue(
+                                "narrow-wire", prim,
+                                f"{name} payload on the wire — narrow "
+                                f"transport must be declared via a "
+                                f"dtype_waivers=('narrow-wire',) contract"))
+                            break
             for v in eqn.params.values():
                 stack.extend(_sub_jaxprs(v))
     return issues

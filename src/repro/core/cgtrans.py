@@ -95,8 +95,67 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import psum_scatter, shard_map
 from repro.core import gas
+from repro.core import wire as wirefmt
 
 AXIS = "data"  # the storage-tier axis
+
+
+# ---------------------------------------------------------------------------
+# the compressed wire (ROADMAP "make the C in CGTrans real"): the codecs live
+# in repro.core.wire (pure transforms); the ONE collective they wrap lives
+# here, inside the contract-covered module, so the collective-site allowlist
+# never grows. wire="f32" keeps every pre-wire code path byte-identical.
+# ---------------------------------------------------------------------------
+
+def _wire_identity(op: gas.Op) -> float:
+    """The op identity non-finite int8 codes decode back to (±inf for the
+    max/min identity rows; add/or partials are finite so it never fires)."""
+    return float(gas._INIT[op]) if op in ("max", "min") else 0.0
+
+
+def _wired_a2a(x, wire: str, identity: float, n_exact: int):
+    enc = wirefmt.encode_payload(x, wire, identity=identity, n_exact=n_exact)
+    parts = lax.all_to_all(enc, AXIS, split_axis=0, concat_axis=0,
+                           tiled=False)
+    return wirefmt.decode_payload(parts, wire, identity=identity,
+                                  n_exact=n_exact, out_dtype=x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _wire_all_to_all(x, wire: str, identity: float = 0.0, n_exact: int = 0):
+    """``all_to_all`` with the payload encoded for transport and decoded
+    (f32 math) on arrival. A ``custom_vjp`` so the codec's ``round``/
+    ``where`` never meet autodiff: the backward ships the cotangent block
+    through the SAME wire — split==concat axis makes the collective its own
+    transpose — so the reverse pass pays the same compressed bytes."""
+    return _wired_a2a(x, wire, identity, n_exact)
+
+
+def _wire_a2a_fwd(x, wire, identity, n_exact):
+    return _wired_a2a(x, wire, identity, n_exact), None
+
+
+def _wire_a2a_bwd(wire, identity, n_exact, _res, g):
+    # cotangents carry no ±inf identities (identity 0); the exact trailing
+    # columns keep count cotangents exact — they are discarded into the
+    # integer mask path anyway, but exactness keeps the wire's error model
+    # one sentence: "quantization touches feature values only".
+    return (_wired_a2a(g, wire, 0.0, n_exact),)
+
+
+_wire_all_to_all.defvjp(_wire_a2a_fwd, _wire_a2a_bwd)
+
+
+def _check_wire(wire: str, dataflow: str) -> str:
+    """Validate a ``wire=`` knob at trace time. The baseline dataflow is the
+    ship-raw strawman — compressing its wire would un-define the comparison
+    the byte benches make — so only cgtrans accepts a narrow wire."""
+    wirefmt.validate(wire)
+    if wire != "f32" and dataflow == "baseline":
+        raise ValueError(
+            "wire compression is a cgtrans-dataflow mechanism; the baseline "
+            "strawman ships raw f32 by definition")
+    return wire
 
 
 def _check_vma(impl: str) -> Optional[bool]:
@@ -194,6 +253,7 @@ def aggregate_edges(
     scheduled: Optional[bool] = None,   # None → on for impl="pallas"
     schedule=None,                      # precomputed build_edge_schedule(...)
     schedule_applied: bool = False,     # edge arrays already in perm order
+    wire: str = "f32",                  # f32 | bf16 | int8 (cgtrans only)
 ) -> jax.Array:
     """Returns (P, part, F) aggregated destination features, owner-sharded.
 
@@ -205,8 +265,11 @@ def aggregate_edges(
     permutation at partition time; sharded-mesh cgtrans flow only). The
     baseline dataflow bins its destination-side reduction after raw
     assembly (a precomputed V-space schedule does not apply there and is
-    ignored).
+    ignored). ``wire`` selects the transport format of the compressed
+    transmission (``repro.core.wire``); the single-shard reference path has
+    no interconnect, so there it is validated and otherwise a no-op.
     """
+    _check_wire(wire, dataflow)
     Pn, part, F = feats.shape
     V = Pn * part
     use_sched = _resolve_scheduled(scheduled, impl) or schedule is not None
@@ -249,9 +312,17 @@ def aggregate_edges(
                                  schedule=sched)
             # compressed transmission: reduce-scatter the (V, F) partials so
             # each shard receives exactly its owned interval, aggregated.
-            if op == "add":
+            if op == "add" and wire == "f32":
                 out = psum_scatter(partial.reshape(n, part, F), AXIS,
                                    scatter_dimension=0)
+            elif op == "add":
+                # a narrow wire cannot ride psum_scatter (it would SUM the
+                # quantized codes on the wire — int8 codes from different
+                # scales don't add); ship each owner its interval's encoded
+                # partials and accumulate in f32 locally. Same bytes-on-wire
+                # shape as the max/min path, ÷2 or ÷4 per the format.
+                parts = _wire_all_to_all(partial.reshape(n, part, F), wire)
+                out = parts.sum(0)
             else:
                 # max/min/or have no fused reduce-scatter; ship each owner
                 # its interval's partials (all_to_all: V·F bytes per shard,
@@ -260,9 +331,11 @@ def aggregate_edges(
                 # while all_to_all is its own transpose — the grad tier
                 # differentiates this flow.) or-partials are ≥ 0, so max
                 # realizes boolean-or.
-                parts = lax.all_to_all(partial.reshape(n, part, F), AXIS,
-                                       split_axis=0, concat_axis=0,
-                                       tiled=False)          # (n, part, F)
+                block = partial.reshape(n, part, F)
+                parts = (lax.all_to_all(block, AXIS, split_axis=0,
+                                        concat_axis=0, tiled=False)
+                         if wire == "f32" else
+                         _wire_all_to_all(block, wire, _wire_identity(op)))
                 out = parts.min(0) if op == "min" else parts.max(0)
             return out[None]
 
@@ -560,6 +633,7 @@ def aggregate_multi(
     impl: str = "xla",
     request_chunk: Optional[int] = None,
     scheduled: Optional[bool] = None,   # None → on for impl="pallas"
+    wire: str = "f32",                  # f32 | bf16 | int8 (cgtrans only)
 ):
     """Coalesced request blocks: aggregate SEVERAL sampled request segments
     in ONE SSD command block. Returns a tuple of (P, R_i, F), one per
@@ -597,9 +671,19 @@ def aggregate_multi(
     segment descriptor (a chunk never spans two segments — their K differ),
     so chunked mode degenerates to per-segment command queues and stays
     bit-exact with the unchunked block.
+
+    ``wire`` compresses BOTH collectives (``repro.core.wire``): the request
+    broadcast ships int16 delta-encoded ids (when the vertex range permits
+    — a static gate; the ``-1`` encoding is preserved exactly) and the
+    result shipment ships bf16 or per-row-scaled int8 partials, decoded to
+    f32 before any accumulation. The backward cotangent block takes the
+    same wire. ``wire="f32"`` traces byte-identically to the pre-wire code;
+    the unsharded reference path has no interconnect, so wire is a no-op
+    there (validated, then ignored).
     """
     if dataflow not in ("cgtrans", "baseline"):
         raise ValueError(dataflow)
+    _check_wire(wire, dataflow)
     blocks = tuple(blocks)
     Pn, part, F = feats.shape
     desc = segment_descriptor([nb.shape[-2:] for nb, _ in blocks])
@@ -644,8 +728,15 @@ def aggregate_multi(
             flat = (seg_enc[0].reshape(-1) if len(seg_enc) == 1 else
                     jnp.concatenate([s.reshape(-1) for s in seg_enc]))
             # the request broadcast: ONE all_gather of the concatenated id
-            # stream ("addresses into the SSD" — masks ride the encoding)
-            ids = lax.all_gather(flat, AXIS)             # (n, N)
+            # stream ("addresses into the SSD" — masks ride the encoding).
+            # On a narrow wire the stream ships as int16 first-order deltas
+            # (half the bytes) whenever the vertex range statically fits —
+            # the cumsum decode restores every id, -1 dead codes included.
+            if wire != "f32" and wirefmt.delta_ids_fit(n * part):
+                ids = wirefmt.delta_decode_ids(
+                    lax.all_gather(wirefmt.delta_encode_ids(flat), AXIS))
+            else:
+                ids = lax.all_gather(flat, AXIS)         # (n, N)
             rel = ids - lo                               # dead ids stay < 0
 
             if dataflow == "cgtrans":
@@ -669,8 +760,17 @@ def aggregate_multi(
                     # column — compressed transmission stays ONE collective
                     payload = jnp.concatenate([payload, cnt[..., None]],
                                               axis=-1)
-                parts = lax.all_to_all(payload, AXIS, split_axis=0,
-                                       concat_axis=0, tiled=False)
+                if wire == "f32":
+                    parts = lax.all_to_all(payload, AXIS, split_axis=0,
+                                           concat_axis=0, tiled=False)
+                else:
+                    # quantize the shipment; the add path's count column is
+                    # an "exact" column (int8 bitcasts it; bf16 carries
+                    # integer counts ≤ 256 exactly) so the mean never
+                    # divides by a quantized count
+                    parts = _wire_all_to_all(
+                        payload, wire, _wire_identity(op),
+                        1 if op == "add" else 0)
                 outs, roff = [], 0
                 for r, k in shapes:
                     seg = parts[:, roff:roff + r]
@@ -737,6 +837,7 @@ def aggregate_sampled(
     impl: str = "xla",
     request_chunk: Optional[int] = None,
     scheduled: Optional[bool] = None,   # None → on for impl="pallas"
+    wire: str = "f32",                  # f32 | bf16 | int8 (cgtrans only)
 ) -> jax.Array:
     """Returns (P, B_loc, F) aggregated neighbor features per seed.
 
@@ -759,5 +860,6 @@ def aggregate_sampled(
     """
     out, = aggregate_multi(feats, ((nbrs, mask),), mesh=mesh,
                            dataflow=dataflow, op=op, impl=impl,
-                           request_chunk=request_chunk, scheduled=scheduled)
+                           request_chunk=request_chunk, scheduled=scheduled,
+                           wire=wire)
     return out

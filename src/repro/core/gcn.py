@@ -46,6 +46,12 @@ class GCNConfig:
                                          # all_gather/all_to_all/kernel
                                          # gather/backward scatter); False
                                          # = the legacy two-body form
+    wire: str = "f32"                    # collective transport format
+                                         # (repro.core.wire): f32 | bf16 |
+                                         # int8 — quantized partials +
+                                         # delta-encoded id streams, f32
+                                         # accumulation always (cgtrans
+                                         # dataflow only)
 
 
 def gcn_schema(cfg: GCNConfig) -> Dict[str, Any]:
@@ -99,7 +105,7 @@ def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
             h, src_local, dst_global, weights, mask,
             mesh=mesh, dataflow=cfg.dataflow, op=cfg.aggregate,
             impl=impl_r, scheduled=use_sched, schedule=sched,
-            schedule_applied=applied)
+            schedule_applied=applied, wire=cfg.wire)
         if cfg.aggregate in ("max", "min"):
             # vertices with no in-edges hold the ±inf identity; mask before
             # the combine so neither the forward nor the cotangent meets inf
@@ -114,14 +120,14 @@ def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
 # ---------------------------------------------------------------------------
 
 def lookup_rows(feats, ids, *, mesh=None, dataflow="cgtrans", impl="xla",
-                request_chunk=None, scheduled=None):
+                request_chunk=None, scheduled=None, wire="f32"):
     """Distributed row lookup: ids (P, B_loc) → (P, B_loc, F)."""
     nbrs = ids[..., None]
     mask = jnp.ones_like(nbrs, dtype=bool)
     return cgtrans.aggregate_sampled(feats, nbrs, mask, mesh=mesh,
                                      dataflow=dataflow, impl=impl,
                                      request_chunk=request_chunk,
-                                     scheduled=scheduled)
+                                     scheduled=scheduled, wire=wire)
 
 
 def sage_forward(params, feats, batch, cfg: GCNConfig, *,
@@ -163,15 +169,17 @@ def sage_forward(params, feats, batch, cfg: GCNConfig, *,
             ((flat1[..., None], jnp.ones(flat1.shape + (1,), bool)),
              (batch["nbrs2"], batch["mask2"])),
             mesh=mesh, dataflow=cfg.dataflow, impl=cfg.impl,
-            request_chunk=cfg.request_chunk, scheduled=cfg.scheduled)
+            request_chunk=cfg.request_chunk, scheduled=cfg.scheduled,
+            wire=cfg.wire)
     else:
         x_self = lookup_rows(feats, flat1, mesh=mesh, dataflow=cfg.dataflow,
                              impl=cfg.impl, request_chunk=cfg.request_chunk,
-                             scheduled=cfg.scheduled)
+                             scheduled=cfg.scheduled, wire=cfg.wire)
         x_agg = cgtrans.aggregate_sampled(
             feats, batch["nbrs2"], batch["mask2"], mesh=mesh,
             dataflow=cfg.dataflow, impl=cfg.impl,
-            request_chunk=cfg.request_chunk, scheduled=cfg.scheduled)
+            request_chunk=cfg.request_chunk, scheduled=cfg.scheduled,
+            wire=cfg.wire)
 
     h1 = jnp.concatenate([x_self, x_agg], axis=-1)
     h1 = jax.nn.relu(jnp.einsum("pbf,fh->pbh", h1, params["w0"]) + params["b0"])

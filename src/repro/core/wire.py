@@ -1,0 +1,179 @@
+"""Wire formats for the CGTrans collectives — the "C" made literal.
+
+CGTrans so far wins bytes by moving *fewer* rows (aggregate-at-owner); this
+module is the paper's other lever: moving *smaller* rows. It is a PURE codec
+layer — encode/decode transforms with no collectives of their own — so the
+``collective-site`` lint allowlist stays exactly as small as it was: the one
+``all_to_all`` these codecs wrap lives in ``repro.core.cgtrans``
+(``_wire_all_to_all``), where every collective is already contract-budgeted.
+
+Three wire formats, selected per dataflow call (``wire=`` on the
+``aggregate_*`` entrypoints, ``GCNConfig.wire``, ``ServingEngine(wire=)``):
+
+* ``"f32"``  — the raw wire. Byte-identical traces to the pre-wire code
+  (no codec primitives appear at all), so every existing contract budget
+  and parity tier is untouched.
+* ``"bf16"`` — cast the ``all_to_all`` partials to bfloat16, ship the bits
+  BITCAST AS INT16 (lossless; an integer wire cannot be silently widened
+  back to f32 by a backend float-normalization pass, which CPU XLA does to
+  bf16 collectives), cast back and ACCUMULATE IN F32 on arrival.
+  Integer-valued payloads with ``|x| ≤ 256`` round-trip bit-exactly (8
+  mantissa bits), which is what keeps a bit-exact mode for the grad-parity
+  tiers; ±inf max/min identity rows are representable and survive as
+  themselves.
+* ``"int8"`` — symmetric per-row quantization: each (segment-row, shard)
+  row of the partial block gets ``scale = max|finite x| / 127`` and ships
+  ``round(x/scale)`` as int8. The f32 scale rides the block as 4 bitcast
+  int8 columns (exact — no second collective, same trick as the ``op="add"``
+  count column), non-finite entries (the ±inf identity rows of max/min
+  partials) ship as the reserved code −128 and decode back to the op
+  identity, and designated "exact" trailing columns (the contribution
+  counts) ride as 4 bitcast int8 columns each so means never divide by a
+  quantized count. Accumulation is f32 on arrival, always.
+
+The request broadcast compresses too: ``delta_encode_ids`` transforms the
+``-1``-encoded id stream to first-order deltas and ships them as int16 —
+half the ``all_gather`` bytes. The safety condition is a STATIC range gate
+(``delta_ids_fit``): ids live in ``[-1, V)``, so every delta lies in
+``[-V, V]`` and int16 is lossless iff ``V ≤ 32767`` — sorted or not (the
+sampled id streams are seed-major, not globally sorted; sortedness makes
+the deltas small, the range gate is what makes them SAFE). ``-1`` dead ids
+are preserved exactly: the decode is an int32 cumsum, so whatever the
+encode summed to comes back bit-for-bit. Streams over the gate ship raw
+int32, unchanged.
+
+Gradients: the codecs themselves are never differentiated —
+``cgtrans._wire_all_to_all`` is a ``custom_vjp`` whose backward ships the
+cotangent block through the SAME wire (quantize → all_to_all → dequantize),
+so the reverse pass pays the same compressed bytes as the forward and no
+``round``/``where`` ever meets autodiff.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+#: the wire formats every ``wire=`` knob accepts
+WIRE_FORMATS = ("f32", "bf16", "int8")
+
+#: ids in [-1, V) have deltas in [-V, V]; int16 holds them iff V ≤ this
+ID_DELTA_MAX_V = 2**15 - 1
+
+#: the reserved int8 code for non-finite payload entries (±inf identity
+#: rows); quantized values clip to [-127, 127] so it can never collide
+INT8_SENTINEL = -128
+
+#: bitcast width of one f32 column carried exactly inside an int8 block
+_F32_BYTES = 4
+
+
+def validate(wire: str) -> str:
+    """The one place a wire-format string is checked (every entrypoint
+    funnels through it, so a typo fails loudly at trace time)."""
+    if wire not in WIRE_FORMATS:
+        raise ValueError(f"unknown wire format {wire!r} (have {WIRE_FORMATS})")
+    return wire
+
+
+# ---------------------------------------------------------------------------
+# the request broadcast: delta-encoded id streams (the all_gather half)
+# ---------------------------------------------------------------------------
+
+def delta_ids_fit(n_vertices: int) -> bool:
+    """Static gate: can a [-1, n_vertices) id stream ship as int16 deltas?"""
+    return int(n_vertices) <= ID_DELTA_MAX_V
+
+
+def delta_encode_ids(ids: jnp.ndarray) -> jnp.ndarray:
+    """(…, N) int32 id stream (``-1`` dead ids included) → int16 first-order
+    deltas along the last axis. Lossless whenever ``delta_ids_fit`` holds
+    for the stream's vertex range — the caller checks; this just encodes."""
+    d = ids.astype(jnp.int32)
+    d = jnp.concatenate([d[..., :1], d[..., 1:] - d[..., :-1]], axis=-1)
+    return d.astype(jnp.int16)
+
+
+def delta_decode_ids(deltas: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of ``delta_encode_ids``: int32 cumsum along the last axis
+    (each row of a gathered (n, N) block decodes independently)."""
+    return jnp.cumsum(deltas.astype(jnp.int32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# the result shipment: quantized partial blocks (the all_to_all half)
+# ---------------------------------------------------------------------------
+
+def _split_exact(x, n_exact: int):
+    if n_exact == 0:
+        return x, None
+    return x[..., : x.shape[-1] - n_exact], x[..., x.shape[-1] - n_exact:]
+
+
+def encode_payload(x: jnp.ndarray, wire: str, *, identity: float = 0.0,
+                   n_exact: int = 0) -> jnp.ndarray:
+    """Encode a float partial block ``(…, C)`` for transport.
+
+    ``n_exact`` trailing columns (the ``op="add"`` contribution counts — or
+    a backward pass's count cotangents) are carried EXACTLY: cast along on
+    the bf16 wire untouched by quantization scales, bitcast to raw bytes on
+    the int8 wire. ``identity`` is the op identity that non-finite entries
+    must decode back to (int8 wire only; bf16 represents ±inf natively).
+    """
+    validate(wire)
+    if wire == "f32":
+        return x
+    if wire == "bf16":
+        # ship the bf16 bits as int16: bitcast is lossless, and an integer
+        # wire is immune to backend float-normalization passes that would
+        # silently widen a bf16 collective back to f32 (CPU XLA does
+        # exactly that — the "compressed" transport would compress nothing)
+        return lax.bitcast_convert_type(x.astype(jnp.bfloat16), jnp.int16)
+    feat, exact = _split_exact(x, n_exact)
+    feat = feat.astype(jnp.float32)
+    finite = jnp.isfinite(feat)
+    mag = jnp.where(finite, jnp.abs(feat), 0.0)
+    scale = (mag.max(axis=-1) / 127.0).astype(jnp.float32)      # (…,)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(feat / safe[..., None]), -127, 127).astype(jnp.int8)
+    q = jnp.where(finite, q, jnp.int8(INT8_SENTINEL))
+    cols = [q, lax.bitcast_convert_type(scale, jnp.int8)]       # (…, C), (…, 4)
+    if n_exact:
+        raw = lax.bitcast_convert_type(exact.astype(jnp.float32), jnp.int8)
+        cols.append(raw.reshape(*exact.shape[:-1], _F32_BYTES * n_exact))
+    return jnp.concatenate(cols, axis=-1)
+
+
+def decode_payload(enc: jnp.ndarray, wire: str, *, identity: float = 0.0,
+                   n_exact: int = 0, out_dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of ``encode_payload`` — always dequantizes INTO f32 math
+    (``out_dtype`` only recasts at the end, so accumulation downstream is
+    f32 even when the features themselves are bf16)."""
+    validate(wire)
+    if wire == "f32":
+        return enc
+    if wire == "bf16":
+        return lax.bitcast_convert_type(enc, jnp.bfloat16).astype(out_dtype)
+    C = enc.shape[-1] - _F32_BYTES - _F32_BYTES * n_exact
+    q = enc[..., :C]
+    scale = lax.bitcast_convert_type(
+        enc[..., C:C + _F32_BYTES], jnp.float32)                # (…,)
+    vals = jnp.where(q == INT8_SENTINEL,
+                     jnp.asarray(identity, jnp.float32),
+                     q.astype(jnp.float32) * scale[..., None])
+    if n_exact:
+        exact = lax.bitcast_convert_type(
+            enc[..., C + _F32_BYTES:].reshape(
+                *enc.shape[:-1], n_exact, _F32_BYTES), jnp.float32)
+        vals = jnp.concatenate([vals, exact], axis=-1)
+    return vals.astype(out_dtype)
+
+
+def int8_row_scale(x) -> jnp.ndarray:
+    """The per-row quantization scale ``encode_payload`` uses — exposed so
+    the property tests (and ``check_env``) can assert the round-trip error
+    bound ``|decode(encode(x)) − x| ≤ scale/2`` against the same number."""
+    finite = jnp.isfinite(x)
+    mag = jnp.where(finite, jnp.abs(x), 0.0)
+    scale = (mag.max(axis=-1) / 127.0).astype(jnp.float32)
+    return jnp.where(scale > 0, scale, 1.0)

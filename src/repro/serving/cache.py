@@ -40,14 +40,17 @@ class HotVertexCache:
     def __contains__(self, vid: int) -> bool:
         return int(vid) in self._rows
 
-    def lookup(self, ids: np.ndarray, n_features: int
-               ) -> Tuple[np.ndarray, np.ndarray]:
+    def lookup(self, ids: np.ndarray, n_features: int,
+               dtype=np.float32) -> Tuple[np.ndarray, np.ndarray]:
         """(B,) ids → ((B, F) rows, (B,) hit mask). Miss rows are zero and
         hit rows are refreshed to most-recently-used; counters tick one per
         id (repeated ids in one batch each count — they each would have
-        been an SSD find)."""
+        been an SSD find). ``dtype`` is the serving table's feature dtype —
+        the result block the engine substitutes hit rows into — so hits
+        stay bit copies on non-f32 tables (bf16 serving) instead of being
+        silently promoted."""
         ids = np.asarray(ids).reshape(-1)
-        rows = np.zeros((ids.shape[0], n_features), np.float32)
+        rows = np.zeros((ids.shape[0], n_features), dtype)
         hit = np.zeros(ids.shape[0], bool)
         for i, vid in enumerate(ids):
             row = self._rows.get(int(vid))
@@ -62,13 +65,15 @@ class HotVertexCache:
 
     def fill(self, ids: np.ndarray, rows: np.ndarray) -> None:
         """Insert fetched (id, row) pairs; least-recently-used rows evict
-        once capacity is exceeded."""
+        once capacity is exceeded. Rows are stored in THEIR OWN dtype —
+        bit copies of what the find returned is the whole exactness claim
+        (an f32 coercion here used to break it for bf16 tables)."""
         ids = np.asarray(ids).reshape(-1)
         for vid, row in zip(ids, np.asarray(rows)):
             key = int(vid)
             if key in self._rows:
                 self._rows.move_to_end(key)
-            self._rows[key] = np.array(row, np.float32, copy=True)
+            self._rows[key] = np.array(row, copy=True)
             if len(self._rows) > self.capacity:
                 self._rows.popitem(last=False)
                 self.evictions += 1

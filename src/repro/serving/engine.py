@@ -103,11 +103,21 @@ class ServingEngine:
         heartbeat: Optional[Heartbeat] = None,
         clock: Callable[[], float] = time.monotonic,
         sample_seed: int = 0,
+        wire: str = "f32",
     ):
-        feats = np.asarray(feats, np.float32)
+        # serve whatever float dtype the table arrives in (bf16 tables are
+        # the embed_lookup transport norm); only non-float tables coerce to
+        # f32 — the ±inf identity/isfinite machinery of the max/min ops
+        # needs a float domain. Hardcoding f32 here used to silently break
+        # the cache's bit-exactness claim for bf16 features.
+        feats = np.asarray(feats)
+        if (not jnp.issubdtype(feats.dtype, jnp.floating)
+                or feats.dtype.itemsize > 4):
+            feats = feats.astype(np.float32)    # ints and f64 → f32, as ever
         if feats.ndim != 2:
             raise ValueError(f"feats must be (V, F), got {feats.shape}")
         self.n_vertices, self.n_features = feats.shape
+        self.feat_dtype = feats.dtype
         self.mesh = mesh
         self.n_shards = (mesh.shape[cgtrans.AXIS]
                          if cgtrans.is_sharded(mesh) else 1)
@@ -124,6 +134,7 @@ class ServingEngine:
         self.dataflow = dataflow
         self.impl = impl
         self.scheduled = scheduled
+        self.wire = cgtrans._check_wire(wire, dataflow)
         self.fuse = fuse
         self.sample_seed = int(sample_seed)
         self.clock = clock
@@ -213,7 +224,8 @@ class ServingEngine:
         """One request → its two command-block segments: the K=1 self-row
         lookup (hot-cache hits masked out) and the fan-out aggregation."""
         if self.cache is not None:
-            cached_rows, hit = self.cache.lookup(req.seeds, self.n_features)
+            cached_rows, hit = self.cache.lookup(req.seeds, self.n_features,
+                                                 dtype=self.feat_dtype)
         else:
             cached_rows = None
             hit = np.zeros(req.seeds.shape[0], bool)
@@ -244,7 +256,8 @@ class ServingEngine:
         many segments each call carries)."""
         return cgtrans.aggregate_multi(
             self.feats, blocks, mesh=self.mesh, dataflow=self.dataflow,
-            op=self.op, impl=self.impl, scheduled=self.scheduled)
+            op=self.op, impl=self.impl, scheduled=self.scheduled,
+            wire=self.wire)
 
     def fetch_callable(self, reqs: Optional[List[ServeRequest]] = None):
         """(fn, args) of the exact fused fetch a drain of ``reqs`` (default:
@@ -259,7 +272,8 @@ class ServingEngine:
         def fn(feats, blocks_):
             return cgtrans.aggregate_multi(
                 feats, blocks_, mesh=self.mesh, dataflow=self.dataflow,
-                op=self.op, impl=self.impl, scheduled=self.scheduled)
+                op=self.op, impl=self.impl, scheduled=self.scheduled,
+                wire=self.wire)
         return fn, (self.feats, tuple(blocks))
 
     def _dispatch(self, reqs: List[ServeRequest]) -> None:

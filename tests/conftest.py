@@ -32,6 +32,16 @@ def coalesce_parity_report():
 
 
 @pytest.fixture(scope="session")
+def wire_parity_report():
+    """The compressed-wire matrix on the real 8-way mesh (bf16 ≡ f32
+    bit-exact values AND gradients on integer payloads, int8 bounded error,
+    the delta-id range gate, unchanged collective counts, the serving
+    engine on the bf16 wire) — run ONCE per session; tests/test_wire.py
+    asserts each cell against this shared stdout."""
+    return run_distributed_case("wire_parity", timeout=900)
+
+
+@pytest.fixture(scope="session")
 def grad_parity_report():
     """The GRADIENT differential matrix on the real 8-way mesh (plus the
     3-step pallas-vs-xla train parity) — run ONCE per session (each cell is

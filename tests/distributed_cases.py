@@ -479,6 +479,187 @@ def _train_parity_on_mesh(mesh):
     print("train pallas-vs-xla 3-step parity ok")
 
 
+def case_wire_parity():
+    """The compressed-wire matrix on a REAL 8-way mesh (repro.core.wire):
+
+    * bf16 wire ≡ f32 wire BIT-EXACT — values and gradients — on
+      integer-valued features (|x| ≤ 5, fan-out sums ≤ 256 fit bf16's 8
+      mantissa bits; dyadic counts keep the mean divisions exact), across
+      sampled/multi/edges × add/max/min × xla/pallas;
+    * int8 wire bounded error on float features (per-row scale/2 per hop);
+    * the delta-id gate: V > 32767 falls back to the raw int32 id stream
+      and still agrees with the reference;
+    * collective counts: the narrow wire changes BYTES, never counts —
+      except edges-add's pinned psum_scatter → all_to_all swap;
+    * the serving engine on the bf16 wire ≡ the f32 engine bit for bit.
+
+    Prints one ``wire … ok`` line per cell; tests/test_wire.py parses them.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import cgtrans
+    from repro.graph import partition_by_src, uniform_graph, host_sample
+    from repro.launch.jaxpr_stats import collective_counts
+    from repro.launch.mesh import make_data_mesh
+
+    mesh = make_data_mesh(8)
+    rng = np.random.default_rng(0)
+    g = uniform_graph(256, 1000, seed=1, n_features=16, weights=True)
+    pg = partition_by_src(g, 8)
+    # integer-valued f32 features in [-5, 5]: masked fan-out sums stay
+    # ≤ 10·5 ≪ 256, so the bf16 wire is lossless by construction
+    feats = jnp.asarray(np.round(np.asarray(pg.features) * 5.0)
+                        .astype(np.float32))
+    mask = np.asarray(pg.mask).copy()
+    mask[3] = False                                        # all-padded shard
+    mask = jnp.asarray(mask)
+    eargs = (jnp.asarray(pg.src), jnp.asarray(pg.dst),
+             jnp.asarray(pg.weights), mask)
+
+    seeds = rng.integers(0, 256, 64).astype(np.int32)
+    nbrs, smask = host_sample(g, seeds, 10, seed=2)
+    nb = jnp.asarray(nbrs.reshape(8, 8, 10))
+    mk = np.asarray(smask.reshape(8, 8, 10)).copy()
+    mk[5] = False                                          # all-padded shard
+    mk = jnp.asarray(mk)
+
+    def exact(a, b, tag):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(tag))
+
+    # -- bf16 ≡ f32 bit-exact values: sampled × op × impl -------------------
+    for op in ("add", "max", "min"):
+        for impl in ("xla", "pallas"):
+            outs = {}
+            for w in ("f32", "bf16"):
+                outs[w] = jax.jit(lambda f, o=op, i=impl, ww=w:
+                                  cgtrans.aggregate_sampled(
+                                      f, nb, mk, mesh=mesh, op=o, impl=i,
+                                      wire=ww))(feats)
+            exact(outs["bf16"], outs["f32"], ("sampled", op, impl))
+            print(f"wire path=sampled op={op} impl={impl} bf16 exact ok")
+
+    # -- bf16 ≡ f32 bit-exact values: edges × op ----------------------------
+    # (unit edge weights keep the payload integer-valued; untouched
+    # destinations hold the ±inf identity on BOTH wires — inf compares
+    # equal to inf, so assert_array_equal pins them too)
+    ew = (eargs[0], eargs[1], jnp.ones_like(eargs[2]), eargs[3])
+    for op in ("add", "max", "min"):
+        outs = {}
+        for w in ("f32", "bf16"):
+            outs[w] = jax.jit(lambda f, o=op, ww=w: cgtrans.aggregate_edges(
+                f, *ew, mesh=mesh, op=o, wire=ww))(feats)
+        exact(outs["bf16"], outs["f32"], ("edges", op))
+        print(f"wire path=edges op={op} bf16 exact ok")
+
+    # -- bf16 ≡ f32 bit-exact: the coalesced command block ------------------
+    nb1 = jnp.asarray(rng.integers(0, 256, (8, 6, 1)).astype(np.int32))
+    mk1 = jnp.ones((8, 6, 1), bool)
+    b1, b2 = (nb1, mk1), (nb, mk)
+    for impl in ("xla", "pallas"):
+        outs = {}
+        for w in ("f32", "bf16"):
+            outs[w] = jax.jit(lambda f, i=impl, ww=w: cgtrans.aggregate_multi(
+                f, (b1, b2), mesh=mesh, impl=i, wire=ww))(feats)
+        exact(outs["bf16"][0], outs["f32"][0], ("multi seg1", impl))
+        exact(outs["bf16"][1], outs["f32"][1], ("multi seg2", impl))
+        print(f"wire path=multi impl={impl} bf16 exact ok")
+
+    # -- bf16 ≡ f32 bit-exact GRADIENTS -------------------------------------
+    # dyadic setup: all-valid masks + K=4 make every mean division exact in
+    # binary; integer cotangents in [-4, 4] stay dyadic through the 1/K —
+    # the backward wire (the custom_vjp ships cotangents through the SAME
+    # codec) is then lossless too
+    nb4 = jnp.asarray(rng.integers(0, 256, (8, 8, 4)).astype(np.int32))
+    mk4 = jnp.ones((8, 8, 4), bool)
+    u = jnp.asarray(rng.integers(-4, 5, (8, 8, 16)).astype(np.float32))
+
+    def sloss(f, impl, w):
+        out = cgtrans.aggregate_sampled(f, nb4, mk4, mesh=mesh, impl=impl,
+                                        wire=w)
+        return jnp.sum(out * u)
+
+    sgrad = jax.jit(jax.grad(sloss), static_argnums=(1, 2))
+    for impl in ("xla", "pallas"):
+        exact(sgrad(feats, impl, "bf16"), sgrad(feats, impl, "f32"),
+              ("sampled grad", impl))
+        print(f"wire grad path=sampled impl={impl} bf16 exact ok")
+
+    u1 = jnp.asarray(rng.integers(-4, 5, (8, 6, 16)).astype(np.float32))
+
+    def mloss(f, w):
+        a, b = cgtrans.aggregate_multi(f, ((nb1, mk1), (nb4, mk4)),
+                                       mesh=mesh, wire=w)
+        return jnp.sum(a * u1) + jnp.sum(b * u)
+
+    mgrad = jax.jit(jax.grad(mloss), static_argnums=(1,))
+    exact(mgrad(feats, "bf16"), mgrad(feats, "f32"), ("multi grad",))
+    print("wire grad path=multi bf16 exact ok")
+
+    # -- int8 bounded error -------------------------------------------------
+    # float features now; the bound is loose (one scale/2 per hop) but the
+    # claim that matters — quantization stays a TRANSPORT error, never a
+    # corruption — shows as a small fraction of the payload magnitude
+    ffeats = jnp.asarray(pg.features)
+    for path, fn in (("sampled", lambda f, w: cgtrans.aggregate_sampled(
+            f, nb, mk, mesh=mesh, wire=w)),
+                     ("edges", lambda f, w: cgtrans.aggregate_edges(
+                         f, *eargs, mesh=mesh, op="max", wire=w))):
+        a = np.asarray(jax.jit(lambda f, fn=fn: fn(f, "int8"))(ffeats))
+        b = np.asarray(jax.jit(lambda f, fn=fn: fn(f, "f32"))(ffeats))
+        fin = np.isfinite(a) & np.isfinite(b)
+        # identity rows (±inf / untouched) must agree EXACTLY between wires
+        assert (np.isfinite(a) == np.isfinite(b)).all(), path
+        err = np.abs(a[fin] - b[fin]).max()
+        span = np.abs(b[fin]).max()
+        assert err <= 0.02 * span + 1e-6, (path, err, span)
+        print(f"wire path={path} int8 bounded ok")
+
+    # -- the delta-id range gate: V over the int16 limit falls back ---------
+    big_v = 2**16                      # > ID_DELTA_MAX_V → raw int32 ids
+    bfeats = jnp.asarray(np.round(rng.standard_normal(
+        (8, big_v // 8, 4)) * 5.0).astype(np.float32))
+    bnb = jnp.asarray(rng.integers(0, big_v, (8, 4, 4)).astype(np.int32))
+    bmk = jnp.ones((8, 4, 4), bool)
+    outs = {}
+    for w in ("f32", "bf16"):
+        outs[w] = jax.jit(lambda f, ww=w: cgtrans.aggregate_sampled(
+            f, bnb, bmk, mesh=mesh, wire=ww))(bfeats)
+    exact(outs["bf16"], outs["f32"], ("delta fallback",))
+    print("wire delta-fallback raw-int32 ids ok")
+
+    # -- counts: bytes change, budgets don't (except edges-add's swap) ------
+    for w in ("bf16", "int8"):
+        cw = collective_counts(lambda f: cgtrans.aggregate_sampled(
+            f, nb, mk, mesh=mesh, wire=w), feats)
+        c0 = collective_counts(lambda f: cgtrans.aggregate_sampled(
+            f, nb, mk, mesh=mesh, wire="f32"), feats)
+        assert dict(cw) == dict(c0), (w, dict(cw), dict(c0))
+        ce = collective_counts(lambda f: cgtrans.aggregate_edges(
+            f, *eargs, mesh=mesh, op="add", wire=w), feats)
+        assert ce["psum_scatter"] == 0 and ce["all_to_all"] == 1, dict(ce)
+    print("wire collective counts ok")
+
+    # -- the serving engine on the bf16 wire --------------------------------
+    from repro.serving import ServingEngine
+    V, F = 256, 16
+    sfeats = np.round(rng.standard_normal((V, F)) * 5.0).astype(np.float32)
+    indptr, indices, _ = g.to_csr()
+    res = {}
+    sseeds = rng.integers(0, V, 8)
+    for w in ("f32", "bf16"):
+        eng = ServingEngine(sfeats, indptr, indices, mesh=mesh, fanout=4,
+                            wire=w, max_batch=8)
+        rids = [eng.submit([int(s)]) for s in sseeds]
+        assert eng.poll() == 8
+        res[w] = [eng.result(r) for r in rids]
+    for a, b in zip(res["bf16"], res["f32"]):
+        exact(a.self_rows, b.self_rows, ("serving self",))
+        exact(a.agg_rows, b.agg_rows, ("serving agg",))
+    print("wire serving bf16 exact ok")
+    print("wire parity ok")
+
+
 def case_cgtrans_collective_bytes():
     """The paper's mechanism measured: cgtrans moves ≈ K× fewer collective
     bytes than baseline for fan-out K sampled aggregation."""

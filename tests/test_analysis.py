@@ -238,6 +238,37 @@ def test_dtype_flow_flags_unsigned_on_the_wire():
     assert check_dtype_flow(traced(jnp.int32)) == []
 
 
+def test_dtype_flow_flags_narrow_wire_unless_waived():
+    """A sub-32-bit payload entering a collective is a lossy/re-encoded
+    transport and must be DECLARED (dtype_waivers=('narrow-wire',)), never
+    an accident: unwaived int8/int16/bf16 collectives flag; the waiver
+    clears them; bool masks (the baseline's 1-bit ownership wire) and f32
+    never flag."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.analysis.dtype_flow import check_dtype_flow
+
+    mesh = compat.make_mesh((1,), ("data",),
+                            axis_types=(compat.AxisType.Auto,))
+
+    def traced(dtype):
+        fn = compat.shard_map(lambda x: jax.lax.pmax(x, "data"),
+                              mesh=mesh, in_specs=P(), out_specs=P())
+        return jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((4,), dtype))
+
+    for narrow in (jnp.int8, jnp.int16, jnp.bfloat16):
+        issues = check_dtype_flow(traced(narrow))
+        assert any(i.rule == "narrow-wire" for i in issues), (narrow, issues)
+        # the declared form is clean — extend the waiver, never the rule
+        assert check_dtype_flow(traced(narrow), waive=("narrow-wire",)) == []
+    # full-width and bool wires are healthy undeclared
+    assert check_dtype_flow(traced(jnp.float32)) == []
+    assert check_dtype_flow(traced(jnp.bool_)) == []
+
+
 def test_dtype_flow_rejects_unknown_waiver():
     import jax
     import jax.numpy as jnp
@@ -276,6 +307,15 @@ def _expected_contract_grid():
     for form in ("fused", "naive"):
         for impl in ("xla", "pallas"):
             grid.add(f"serving_fetch/{form}/{impl}")
+    # compressed wire variants (repro.core.wire): same budgets as their f32
+    # twins except edges-add (psum_scatter → all_to_all), all carrying the
+    # narrow-wire waiver
+    for w in ("bf16", "int8"):
+        grid |= {f"aggregate_sampled/cgtrans/xla/{w}",
+                 f"aggregate_multi/cgtrans/xla/{w}",
+                 f"aggregate_edges/cgtrans/add/xla/{w}"}
+    grid |= {"aggregate_multi/cgtrans/pallas/bf16",
+             "serving_fetch/fused/xla/bf16"}
     return grid
 
 
@@ -328,7 +368,7 @@ def test_sage_tables_agree_with_sage_contracts():
 def test_lint_cli_reports_ok_on_head():
     """The CI gate end-to-end: scripts/lint.py --json exits 0 on HEAD with
     a clean AST report. Contract verification is restricted to one cheap
-    entrypoint here — ci.sh --tier lint runs the full 43 separately."""
+    entrypoint here — ci.sh --tier lint runs the full 51 separately."""
     proc = subprocess.run(
         [sys.executable, str(REPO / "scripts" / "lint.py"), "--json",
          "--contracts", "embed_lookup/baseline/xla"],

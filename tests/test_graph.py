@@ -199,3 +199,22 @@ def test_property_partition_conserves_edges(n, m, p, seed):
     g = uniform_graph(n, m, seed=seed)
     pg = partition_by_src(g, p)
     assert int(pg.mask.sum()) == m
+
+
+def test_partition_edgeless_graph():
+    """A vertex set with no edges (cold-start serving tables, freshly
+    allocated shards) must partition cleanly: valid padded shapes, an
+    all-False edge mask, features laid out per owner — not a crash in the
+    bincount/argsort plumbing."""
+    feats = np.arange(32 * 4, dtype=np.float32).reshape(32, 4)
+    g = COOGraph(32, np.zeros(0, np.int64), np.zeros(0, np.int64),
+                 features=feats)
+    pg = partition_by_src(g, 4)
+    assert pg.src.shape == pg.dst.shape == pg.mask.shape
+    assert pg.src.shape[0] == 4 and pg.src.shape[1] >= 1
+    assert not pg.mask.any()                      # every slot is padding
+    np.testing.assert_array_equal(
+        pg.features.reshape(-1, 4)[:32], feats)   # owner-order layout
+    # and the empty CSR round-trips too
+    indptr, indices, _ = g.to_csr()
+    assert indptr[-1] == 0 and indices.size == 0

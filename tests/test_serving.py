@@ -379,3 +379,99 @@ def test_mesh_collectives_per_query_drop(rng):
         assert base[coll] == per_q * SERVE_CONTRACT_N, (coll, dict(base))
         # per-query strictly below the baseline
         assert fused[coll] / SERVE_CONTRACT_N < per_q
+
+
+# ---------------------------------------------------------------------------
+# 7. dtype fidelity + degenerate inputs (the PR-8 bugfix sweep)
+# ---------------------------------------------------------------------------
+
+def test_bf16_feature_table_served_bitexact(rng):
+    """The engine serves whatever float dtype the table arrives in
+    (``feats = np.asarray(feats, np.float32)`` used to silently promote
+    bf16 tables, breaking the cache's bit-copy claim): results come back
+    bf16, and cache-on ≡ cache-off bit for bit through REAL hits."""
+    import jax.numpy as jnp
+
+    indptr, indices, feats = _graph_feats(rng)
+    bfeats = np.asarray(jnp.asarray(feats, jnp.bfloat16))
+    res = {}
+    seeds = rng.integers(0, V, 4)
+    for cap in (0, V):
+        eng = _mk_engine(indptr, indices, bfeats, cache_capacity=cap)
+        assert eng.feat_dtype == bfeats.dtype
+        rids = []
+        for batch in (seeds, seeds):        # second batch = all repeats
+            rids += _submit_batch(eng, [[int(s)] for s in batch])
+            assert eng.flush() == len(batch)
+        res[cap] = [eng.result(r) for r in rids]
+        if cap:
+            assert eng.cache.hits > 0                      # hits really hit
+    for a, b in zip(res[0], res[V]):
+        assert a.self_rows.dtype == bfeats.dtype
+        np.testing.assert_array_equal(a.self_rows, b.self_rows)
+        np.testing.assert_array_equal(a.agg_rows, b.agg_rows)
+
+
+def test_non_float_and_f64_tables_coerce_to_f32(rng):
+    """Integer tables (no ±inf identity domain) and f64 tables (the f64
+    dtype-flow rule) still coerce — only SERVABLE float dtypes pass
+    through."""
+    indptr, indices, feats = _graph_feats(rng)
+    for table in (feats.astype(np.int32), feats.astype(np.float64)):
+        eng = _mk_engine(indptr, indices, table)
+        assert eng.feat_dtype == np.float32
+        rid = eng.submit([3])
+        eng.flush()
+        assert eng.result(rid).self_rows.dtype == np.float32
+
+
+def test_engine_rejects_narrow_wire_on_baseline(rng):
+    indptr, indices, feats = _graph_feats(rng)
+    with pytest.raises(ValueError, match="baseline"):
+        _mk_engine(indptr, indices, feats, dataflow="baseline", wire="bf16")
+    with pytest.raises(ValueError, match="unknown wire format"):
+        _mk_engine(indptr, indices, feats, wire="fp8")
+
+
+def test_flush_empty_queue_is_a_noop(rng):
+    indptr, indices, feats = _graph_feats(rng)
+    eng = _mk_engine(indptr, indices, feats)
+    assert eng.flush() == 0
+    assert eng.stats["dispatches"] == 0     # no phantom dispatch recorded
+    assert eng.stats["command_blocks"] == 0
+
+
+def test_drain_limit_zero_returns_empty_without_side_effects(rng):
+    indptr, indices, feats = _graph_feats(rng)
+    eng = _mk_engine(indptr, indices, feats)
+    eng.submit([1]), eng.submit([2])
+    q = eng.queue
+    assert q.drain(limit=0) == []
+    assert len(q) == 2 and q.drained == 0 and q.submitted == 2
+    assert eng.flush() == 2                 # the requests are still whole
+
+
+@_mesh_cells
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+def test_mesh_pad_rows_reduce_to_identity(rng, op):
+    """``_shape_block`` pads each segment to a multiple of the shard count
+    with all-masked rows; those rows must reduce to the op identity and be
+    sliced off — NEVER leak into a caller's rows. All-negative features
+    make a leak a hard mismatch (a pad row surfacing as 0 beats every real
+    max), and B=1 seeds on the 8-way mesh force 7 pad rows per segment."""
+    from repro.launch.mesh import make_data_mesh
+
+    indptr, indices, feats = _graph_feats(rng)
+    feats = -np.abs(feats) - 1.0            # strictly negative table
+    seeds_list = [[int(s)] for s in rng.integers(0, V, 3)]  # 3 % 8 != 0 too
+    res = {}
+    for mesh in (make_data_mesh(8), None):
+        eng = _mk_engine(indptr, indices, feats, mesh=mesh, op=op,
+                         max_batch=len(seeds_list))
+        rids = _submit_batch(eng, seeds_list)
+        eng.flush()
+        res[mesh is None] = [eng.result(r) for r in rids]
+    for a, b in zip(res[False], res[True]):
+        np.testing.assert_array_equal(a.self_rows, b.self_rows)
+        np.testing.assert_array_equal(a.agg_rows, b.agg_rows)
+        assert (a.self_rows < 0).all()      # no identity/zero leak

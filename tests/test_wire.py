@@ -1,0 +1,225 @@
+"""The compressed wire format (``repro.core.wire``): codec properties on
+the host, and the parity matrix on the real 8-way mesh.
+
+Layer 1 (runs everywhere, 1 device): the codecs are PURE transforms, so
+their contracts are property-testable without a mesh — delta id streams
+round-trip with ``-1`` sentinels intact, bf16 is bit-exact on small
+integers, int8 error is bounded by the per-row scale, non-finite entries
+ride the sentinel code and decode to the op identity, and the "exact"
+trailing columns are bit copies.
+
+Layer 2 (``@pytest.mark.distributed``): one subprocess run of
+``distributed_cases.case_wire_parity`` on 8 fake devices; each test here
+asserts one printed cell — same pattern as the pallas/coalesce/grad tiers.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _propcheck import given, settings, strategies as st
+from repro.core import cgtrans, wire
+
+
+# ---------------------------------------------------------------------------
+# 1. codec properties (host-level, no mesh)
+# ---------------------------------------------------------------------------
+
+def test_validate_rejects_unknown_format():
+    with pytest.raises(ValueError, match="unknown wire format"):
+        wire.validate("q4")
+    for w in wire.WIRE_FORMATS:
+        assert wire.validate(w) == w
+
+
+def test_delta_fit_gate_is_the_int16_boundary():
+    assert wire.delta_ids_fit(wire.ID_DELTA_MAX_V)
+    assert not wire.delta_ids_fit(wire.ID_DELTA_MAX_V + 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(-1, wire.ID_DELTA_MAX_V - 1),
+                min_size=1, max_size=64),
+       st.integers(1, 4))
+def test_delta_ids_roundtrip_identity(ids, rows):
+    """Any in-gate id stream — sorted or not, ``-1`` dead ids anywhere —
+    decodes back bit-for-bit (the decode is an int32 cumsum, so whatever
+    the encode summed to comes back exactly)."""
+    block = jnp.asarray(np.tile(np.asarray(ids, np.int32), (rows, 1)))
+    out = wire.delta_decode_ids(wire.delta_encode_ids(block))
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(block))
+
+
+def test_delta_ids_wire_is_int16():
+    enc = wire.delta_encode_ids(jnp.asarray([[0, 5, -1, 3]], jnp.int32))
+    assert enc.dtype == jnp.int16     # half the all_gather bytes — the claim
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(-256, 256), min_size=1, max_size=32))
+def test_bf16_bitexact_on_small_integers(vals):
+    """Integer payloads with |x| ≤ 256 fit bf16's 8 mantissa bits — the
+    precondition the grad-parity tiers' bit-exact claim rests on."""
+    x = jnp.asarray(np.asarray(vals, np.float32)[None])
+    out = wire.decode_payload(wire.encode_payload(x, "bf16"), "bf16")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_bf16_preserves_inf_identities():
+    x = jnp.asarray([[np.inf, -np.inf, 3.0]], np.float32)
+    out = wire.decode_payload(wire.encode_payload(x, "bf16"), "bf16")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3), min_size=2, max_size=32),
+       st.integers(0, 10**6))
+def test_int8_roundtrip_error_bounded_by_row_scale(vals, seed):
+    """|decode(encode(x)) − x| ≤ scale/2 per entry, with the SAME scale the
+    encoder used (``wire.int8_row_scale`` is exported exactly so this bound
+    is asserted against the encoder's own number, not a re-derivation)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.permutation(np.asarray(vals, np.float32))[None])
+    out = wire.decode_payload(wire.encode_payload(x, "int8"), "int8")
+    scale = np.asarray(wire.int8_row_scale(x))[..., None]
+    err = np.abs(np.asarray(out) - np.asarray(x))
+    assert (err <= scale / 2 + 1e-6).all(), (err.max(), scale.max())
+
+
+def test_int8_sentinel_decodes_to_op_identity():
+    """±inf entries (the max/min identity rows of a partial block) ship as
+    the reserved −128 code and decode back to the requested identity —
+    never to a quantized garbage value."""
+    x = jnp.asarray([[np.inf, -np.inf, 2.0, -2.0]], np.float32)
+    for ident in (0.0, float(np.inf), float(-np.inf)):
+        out = np.asarray(wire.decode_payload(
+            wire.encode_payload(x, "int8", identity=ident), "int8",
+            identity=ident))
+        assert out[0, 0] == ident and out[0, 1] == ident
+        np.testing.assert_allclose(out[0, 2:], [2.0, -2.0], atol=2.0 / 127)
+
+
+def test_int8_zero_row_roundtrips_to_zero():
+    x = jnp.zeros((3, 8), jnp.float32)
+    out = wire.decode_payload(wire.encode_payload(x, "int8"), "int8")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6), min_size=1, max_size=3))
+def test_int8_exact_columns_are_bit_copies(vals):
+    """``n_exact`` trailing columns (the op="add" contribution counts) ride
+    as 4 bitcast int8 columns each — EXACT, so means never divide by a
+    quantized count."""
+    exact = np.asarray(vals, np.float32)[None]        # (1, n_exact)
+    n_exact = exact.shape[-1]
+    x = jnp.asarray(np.concatenate(
+        [np.linspace(-9, 9, 5, dtype=np.float32)[None], exact], axis=-1))
+    out = np.asarray(wire.decode_payload(
+        wire.encode_payload(x, "int8", n_exact=n_exact), "int8",
+        n_exact=n_exact))
+    np.testing.assert_array_equal(out[..., 5:], np.asarray(x)[..., 5:])
+
+
+def test_f32_wire_is_the_identity():
+    x = jnp.asarray([[1.5, -2.5]], np.float32)
+    assert wire.encode_payload(x, "f32") is x
+    assert wire.decode_payload(x, "f32") is x
+
+
+# ---------------------------------------------------------------------------
+# 2. entrypoint plumbing (host-level, unsharded)
+# ---------------------------------------------------------------------------
+
+def _tiny_sampled(wire_fmt, dataflow="cgtrans"):
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(np.round(rng.standard_normal((1, 16, 8)) * 5.0)
+                        .astype(np.float32))
+    nbrs = jnp.asarray(rng.integers(0, 16, (1, 4, 3)).astype(np.int32))
+    mask = jnp.ones((1, 4, 3), bool)
+    return cgtrans.aggregate_sampled(feats, nbrs, mask, mesh=None,
+                                     dataflow=dataflow, wire=wire_fmt)
+
+
+def test_entrypoints_reject_unknown_wire():
+    with pytest.raises(ValueError, match="unknown wire format"):
+        _tiny_sampled("q4")
+
+
+def test_baseline_dataflow_rejects_narrow_wire():
+    """The baseline ships RAW feature rows — there is no partial block to
+    quantize — so asking for a narrow wire on it is a config error, not a
+    silent no-op."""
+    with pytest.raises(ValueError, match="baseline"):
+        _tiny_sampled("bf16", dataflow="baseline")
+    # f32 on baseline stays legal (it IS the raw wire)
+    _tiny_sampled("f32", dataflow="baseline")
+
+
+def test_unsharded_path_ignores_wire_bitexactly():
+    """With no mesh there is no collective and therefore no wire — every
+    format returns the identical local computation."""
+    ref = np.asarray(_tiny_sampled("f32"))
+    for w in ("bf16", "int8"):
+        np.testing.assert_array_equal(np.asarray(_tiny_sampled(w)), ref)
+
+
+# ---------------------------------------------------------------------------
+# 3. the on-mesh matrix: every cell of the shared 8-way subprocess run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_mesh_bf16_sampled_bitexact(wire_parity_report, op, impl):
+    line = f"wire path=sampled op={op} impl={impl} bf16 exact ok"
+    assert line in wire_parity_report, f"missing/failed cell: {line!r}"
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+def test_mesh_bf16_edges_bitexact(wire_parity_report, op):
+    line = f"wire path=edges op={op} bf16 exact ok"
+    assert line in wire_parity_report, f"missing/failed cell: {line!r}"
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_mesh_bf16_multi_bitexact(wire_parity_report, impl):
+    line = f"wire path=multi impl={impl} bf16 exact ok"
+    assert line in wire_parity_report, f"missing/failed cell: {line!r}"
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_mesh_bf16_grads_bitexact(wire_parity_report, impl):
+    """The headline: the backward wire (custom_vjp cotangent shipment) is
+    as lossless as the forward on dyadic payloads."""
+    line = f"wire grad path=sampled impl={impl} bf16 exact ok"
+    assert line in wire_parity_report, f"missing/failed cell: {line!r}"
+    assert "wire grad path=multi bf16 exact ok" in wire_parity_report
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("path", ["sampled", "edges"])
+def test_mesh_int8_bounded(wire_parity_report, path):
+    line = f"wire path={path} int8 bounded ok"
+    assert line in wire_parity_report, f"missing/failed cell: {line!r}"
+
+
+@pytest.mark.distributed
+def test_mesh_delta_gate_falls_back_raw(wire_parity_report):
+    assert "wire delta-fallback raw-int32 ids ok" in wire_parity_report
+
+
+@pytest.mark.distributed
+def test_mesh_wire_changes_bytes_never_counts(wire_parity_report):
+    assert "wire collective counts ok" in wire_parity_report
+
+
+@pytest.mark.distributed
+def test_mesh_serving_on_bf16_wire(wire_parity_report):
+    assert "wire serving bf16 exact ok" in wire_parity_report
