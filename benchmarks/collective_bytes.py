@@ -33,6 +33,14 @@ Measurements per run:
   (forward + backward + AdamW) on the 8-way mesh, ``impl="xla"`` vs
   ``impl="pallas"`` scheduled/unscheduled — the kernel carries custom VJPs,
   so the backward runs through FAST-GAS too.
+* ``partition`` rows — islandized locality partitioning, counted: the same
+  scrambled-id clustered graph split by the plain interval cut vs
+  ``partition_graph(method="island")`` (``repro.graph.islandize``), with the
+  remote all_to_all destination rows (``remote_destination_rows``, summed
+  and worst-shard) and the dense (row-block × edge-tile) live rounds per
+  layout. Asserted by the exit code via ``check_partition_rows``: the
+  islandized layout must STRICTLY beat the interval cut on both counters,
+  with total rounds unchanged (the relabeling is a pure permutation).
 * ``coalesce``/``coalesce_grad`` rows — request coalescing, counted: the
   sage-shaped two-stream fetch (self-row lookup + 2-hop block) issued as
   ONE ``aggregate_multi`` command block vs two ``aggregate_sampled`` calls.
@@ -229,6 +237,90 @@ def bench_skip_rate(ways: int = 8, V: int = 1024, E: int = 16384) -> list:
                 "skip_rate": 1.0 - live / total,
             })
     return rows
+
+
+def bench_partition(ways: int = 8, V: int = 1024, E: int = 8192,
+                    n_clusters: int = 8, p_intra: float = 0.95) -> list:
+    """Islandized locality partitioning, counted: the same scrambled-id
+    clustered graph split two ways — the plain contiguous-id interval cut vs
+    ``partition_graph(method="island")`` (BFS island growing + boundary
+    refinement + aligned packing, host-side, once per graph). Two counters
+    per layout, both deterministic:
+
+    * ``remote_rows`` — distinct live destination rows each shard must ship
+      through the all_to_all because another shard owns them (summed, plus
+      the max shard for the tail), from ``remote_destination_rows``;
+    * ``live_rounds`` — dense (row-block × edge-tile) occupancy of the raw
+      per-shard edge streams (``dense_skip_stats``): the relabeling packs
+      communities into contiguous row blocks, so occupancy goes near
+      block-diagonal even before the destination-binned schedule runs.
+
+    The ids are scrambled through a fixed permutation first — on id-ordered
+    clusters the interval cut is already island-aligned and there is nothing
+    to win; scrambled ids are the honest (and realistic) adversary.
+    """
+    from repro.graph import (COOGraph, clustered_graph, partition_graph,
+                             remote_destination_rows)
+    from repro.kernels.gas_scatter import dense_skip_stats
+
+    g0 = clustered_graph(V, E, n_clusters=n_clusters, p_intra=p_intra, seed=3)
+    perm = np.random.default_rng(1003).permutation(V).astype(np.int32)
+    g = COOGraph(V, perm[g0.src], perm[g0.dst], g0.weights, None)
+
+    rows = []
+    for method in ("interval", "island"):
+        pg, _ = partition_graph(g, ways, method=method)
+        rr = remote_destination_rows(pg)
+        live = total = 0
+        for p in range(ways):
+            lv, tt = dense_skip_stats(jnp.asarray(pg.dst[p]),
+                                      jnp.asarray(pg.mask[p]), V)
+            live += lv
+            total += tt
+        rows.append({
+            "mode": "partition", "ways": ways, "V": V, "E": E,
+            "n_clusters": n_clusters, "p_intra": p_intra, "method": method,
+            "remote_rows": int(rr.sum()),
+            "remote_rows_max_shard": int(rr.max()),
+            "live_rounds": int(live), "total_rounds": int(total),
+        })
+    by = {r["method"]: r for r in rows}
+    for r in rows:
+        r["remote_rows_vs_interval"] = (
+            r["remote_rows"] / max(by["interval"]["remote_rows"], 1))
+        r["live_rounds_vs_interval"] = (
+            r["live_rounds"] / max(by["interval"]["live_rounds"], 1))
+    return rows
+
+
+def check_partition_rows(rows) -> list:
+    """The islandization mechanism, asserted deterministically: on the
+    scrambled-id clustered graph the islandized layout must STRICTLY beat
+    the interval cut on both counters — fewer remote destination rows
+    (summed and on the worst shard) and fewer dense live rounds. Returns
+    failure strings (empty = the claim holds)."""
+    by = {r["method"]: r for r in rows if r["mode"] == "partition"}
+    iv, isl = by["interval"], by["island"]
+    failures = []
+    if isl["remote_rows"] >= iv["remote_rows"]:
+        failures.append(
+            f"islandized remote destination rows ({isl['remote_rows']}) not "
+            f"below the interval cut ({iv['remote_rows']})")
+    if isl["remote_rows_max_shard"] >= iv["remote_rows_max_shard"]:
+        failures.append(
+            f"islandized worst-shard remote rows "
+            f"({isl['remote_rows_max_shard']}) not below the interval cut "
+            f"({iv['remote_rows_max_shard']})")
+    if isl["live_rounds"] >= iv["live_rounds"]:
+        failures.append(
+            f"islandized dense live rounds ({isl['live_rounds']}) not below "
+            f"the interval cut ({iv['live_rounds']})")
+    if isl["total_rounds"] != iv["total_rounds"]:
+        failures.append(
+            f"total rounds changed under relabeling "
+            f"({isl['total_rounds']} vs {iv['total_rounds']}) — the "
+            f"relabeling must be a pure permutation")
+    return failures
 
 
 def bench_coalesce(ways: int = 8, B: int = 8, K1: int = 3, K2: int = 10,
@@ -707,6 +799,18 @@ def main(argv=None) -> int:
               f"{r['live_rounds']:>5d}/{r['total_rounds']:<5d} rounds live  "
               f"skip_rate={r['skip_rate']:.2f}")
 
+    # islandized locality partitioning, counted: on the scrambled-id
+    # clustered graph the island relabeling must shrink both the remote
+    # all_to_all destination rows and the dense round occupancy
+    partition_rows = bench_partition(8)
+    for r in partition_rows:
+        rows.append(r)
+        print(f"partition/{r['method']:<9s} "
+              f"remote_rows={r['remote_rows']:>5d} "
+              f"(max/shard {r['remote_rows_max_shard']:>4d})  "
+              f"dense {r['live_rounds']:>5d}/{r['total_rounds']:<5d} rounds "
+              f"live  vs_interval={r['remote_rows_vs_interval']:.2f}")
+
     # request coalescing, counted: the sage-shaped two-stream fetch as one
     # SSD command block — collectives-per-step 2 → 1 (cgtrans), finds
     # 2 → 1, pallas fwd+bwd kernel scatters 3 → 2; bytes for the record
@@ -788,6 +892,13 @@ def main(argv=None) -> int:
         "agg_sched_vs_unsched_pallas":
             agg[("pallas", True)] / agg[("pallas", False)],
         "clustered_skipped_rounds": sk[0]["skipped_rounds"] if sk else 0,
+        # the partitioning headline: what the islandized relabeling removes
+        # on the scrambled-id clustered graph, per counter (island/interval,
+        # lower is better — asserted strict by check_partition_rows)
+        "partition_remote_rows": {
+            r["method"]: r["remote_rows"] for r in partition_rows},
+        "partition_dense_live_rounds": {
+            r["method"]: r["live_rounds"] for r in partition_rows},
         # the coalescing headline: collectives-per-step on the cgtrans
         # sampled path, separate two-stream form vs the coalesced command
         # block (each = all_gather + all_to_all counts, deterministic)
@@ -836,6 +947,10 @@ def main(argv=None) -> int:
         mech_failures.append(
             f"scheduled live rounds ({cs['live_rounds']}) not below the "
             f"unscheduled occupancy ({cu['live_rounds']})")
+    # the islandization mechanism, asserted the same way (counters, not
+    # clocks): strictly fewer remote rows and dense live rounds than the
+    # interval cut on the scrambled-id clustered graph
+    mech_failures += check_partition_rows(partition_rows)
     # the coalescing mechanism, asserted the same way (counters, not clocks)
     mech_failures += check_coalesce_rows(coalesce_rows)
     # and the serving mechanism: fused command blocks + hot cache

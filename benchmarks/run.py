@@ -182,6 +182,12 @@ def bench_collective_bytes(fast=False):
             print(f"skip_rate_{r['graph']}_{tag},0.0,"
                   f"live={r['live_rounds']}/{r['total_rounds']};"
                   f"skip_rate={r['skip_rate']:.2f}")
+        elif r["mode"] == "partition":
+            print(f"partition_{r['method']},0.0,"
+                  f"remote_rows={r['remote_rows']}"
+                  f"(max{r['remote_rows_max_shard']});"
+                  f"dense_live={r['live_rounds']}/{r['total_rounds']};"
+                  f"vs_interval={r['remote_rows_vs_interval']:.2f}")
         elif r["mode"] == "train_step_time":
             tag = "_sched" if r.get("scheduled") else ""
             print(f"train_step_{r['impl']}{tag},{r['us']:.0f},"
@@ -215,7 +221,10 @@ def bench_collective_bytes(fast=False):
           f"serving_finds_per_query="
           f"{s.get('serving_finds_per_query', {}).get('fused', '?')};"
           f"serving_cache_hit_rate="
-          f"{s.get('serving_cache_hit_rate', '?')}")
+          f"{s.get('serving_cache_hit_rate', '?')};"
+          f"partition_remote_rows="
+          f"{s.get('partition_remote_rows', {}).get('interval', '?')}to"
+          f"{s.get('partition_remote_rows', {}).get('island', '?')}")
 
 
 def bench_kernels(fast=False):

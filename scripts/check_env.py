@@ -210,6 +210,37 @@ def main(argv=None) -> int:
             f"the compressed-wire codecs do not round-trip on this JAX — "
             f"the wire tier (ci.sh --tier wire) cannot run: {e!r}")
 
+    # -- islandized locality partitioner (the partitioning tier) -----------
+    # the part tier (tests/test_partition.py, ci.sh --tier part) rests on
+    # islandize emitting a true permutation whose packing beats the interval
+    # split on community graphs; probe the host-side pipeline end to end on
+    # a tiny shuffled clustered graph so a numpy/BFS regression fails with
+    # one message instead of a tier-wide explosion
+    try:
+        import numpy as np
+        from repro.graph import (COOGraph, clustered_graph, islandize,
+                                 partition_by_src, partition_graph,
+                                 remote_destination_rows)
+
+        gk = clustered_graph(64, 512, n_clusters=8, p_intra=0.95, seed=0)
+        pm = np.random.default_rng(1).permutation(64).astype(np.int32)
+        gk = COOGraph(64, pm[gk.src], pm[gk.dst])
+        isl = islandize(gk, 4)
+        assert np.array_equal(np.sort(isl.relabel), np.arange(64)), "not a permutation"
+        assert np.array_equal(isl.inverse[isl.relabel], np.arange(64))
+        rr_i = remote_destination_rows(partition_by_src(gk, 4)).sum()
+        rr_s = remote_destination_rows(
+            partition_graph(gk, 4, method="island")[0]).sum()
+        assert int(rr_s) < int(rr_i), (rr_i, rr_s)
+        rows.append(("islandize",
+                     "functional (relabel is a permutation, locality win "
+                     f"{int(rr_i)}->{int(rr_s)} remote rows)"))
+    except Exception as e:  # noqa: BLE001 — report, don't crash the report
+        rows.append(("islandize", "BROKEN"))
+        failures.append(
+            f"the islandized locality partitioner failed its probe — the "
+            f"partitioning tier (ci.sh --tier part) cannot run: {e!r}")
+
     # -- abstract tracing through shard_map (the lint/contract layer) ------
     # scripts/lint.py verifies every DataflowContract by jax.make_jaxpr /
     # eval_shape over ShapeDtypeStruct args — traced through shard_map with

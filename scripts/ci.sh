@@ -29,6 +29,12 @@
 #                                        # properties (delta ids, bf16,
 #                                        # int8 bounds) plus the on-mesh
 #                                        # bf16/int8 parity matrix
+#   scripts/ci.sh --tier part            # the partitioning tier: islandize
+#                                        # invariants + vectorized
+#                                        # partitioner degenerate cases +
+#                                        # generator contracts + the
+#                                        # islandized ≡ interval parity
+#                                        # matrix (host and 8-way mesh)
 #   scripts/ci.sh --list-tiers           # machine-readable lane list (one
 #                                        # per line) — .github/workflows/
 #                                        # ci.yml builds its job matrix
@@ -41,7 +47,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # every lane the workflow matrix runs; `full` is tier-1 (the workflow passes
 # it `-m "not distributed"` — the subprocess cases already run one-per-lane)
-TIERS=(pallas grad sched coalesce serve lint wire full)
+TIERS=(pallas grad sched coalesce serve lint wire part full)
 
 TIER="full"
 # seeded with the always-on flags so the array is never empty: the classic
@@ -127,6 +133,15 @@ case "$TIER" in
     # impls and all three ops) runs once in an 8-device subprocess that
     # sets its own XLA_FLAGS, so no topology forcing is needed here.
     python -m pytest "${ARGS[@]}" tests/test_wire.py
+    ;;
+  part)
+    # the partitioning tier: islandize permutation/alignment invariants,
+    # the vectorized partition_by_src vs the loop oracle (+ its pinned
+    # degenerate shapes), synthetic-generator contracts, the in-process
+    # islandized ≡ interval parity (values, grads, serving with the cache
+    # on), and the 8-way subprocess matrix — the subprocess sets its own
+    # XLA_FLAGS, so no topology forcing is needed here.
+    python -m pytest "${ARGS[@]}" tests/test_partition.py
     ;;
   *)
     echo "unknown --tier '$TIER' (expected one of: ${TIERS[*]})" >&2

@@ -37,6 +37,8 @@ CONFIG = GCNConfig(
                        # ONE SSD command block (collectives-per-step 2 → 1;
                        # the default — spelled out because it IS the
                        # paper's command-queue batching)
+    partition="interval",  # contiguous-id vertex layout (the oracle layout;
+                           # ISLAND_PALLAS_CONFIG below switches it)
 )
 
 # The deployed FAST-GAS configuration: Pallas kernel aggregation + a 16-seed
@@ -48,6 +50,17 @@ CONFIG = GCNConfig(
 # kernel's custom VJPs keep the backward in-SSD too, reusing the schedule.
 PALLAS_CONFIG = dataclasses.replace(CONFIG, impl="pallas", request_chunk=16,
                                     scheduled=True)
+
+# The locality deployment: FAST-GAS kernel + islandized vertex layout
+# (``repro.graph.partition.islandize`` — BFS islands, boundary-refined,
+# packed into the shard intervals). Callers partition the graph with
+# ``partition_graph(g, P, method="island")`` and hand the returned
+# ``IslandPartition.relabel`` to ``sage_forward`` / ``gcn_forward_full`` /
+# ``make_sage_train_step`` (``ServingEngine(partition="island")`` does all
+# of this internally). Fewer remote all_to_all destination rows and a near
+# block-diagonal idle-skip occupancy on community graphs, bit-exact with
+# PALLAS_CONFIG (the `part` tier's parity matrix).
+ISLAND_PALLAS_CONFIG = dataclasses.replace(PALLAS_CONFIG, partition="island")
 
 # per-dataset feature widths (Table II) for benchmarks
 TABLE_II_GCN = {

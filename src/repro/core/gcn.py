@@ -52,6 +52,19 @@ class GCNConfig:
                                          # delta-encoded id streams, f32
                                          # accumulation always (cgtrans
                                          # dataflow only)
+    partition: str = "interval"          # host-side vertex layout
+                                         # (repro.graph.partition): interval
+                                         # = contiguous-id split | island =
+                                         # islandized locality relabeling —
+                                         # callers partition via
+                                         # partition_graph(method="island")
+                                         # and pass the IslandPartition's
+                                         # relabel map to sage_forward /
+                                         # gcn_forward_full, which translate
+                                         # ids in and un-permute full-graph
+                                         # outputs back to original vertex
+                                         # order (islandized ≡ interval
+                                         # bit-exact)
 
 
 def gcn_schema(cfg: GCNConfig) -> Dict[str, Any]:
@@ -73,9 +86,24 @@ def gcn_schema(cfg: GCNConfig) -> Dict[str, Any]:
 # full-graph GCN
 # ---------------------------------------------------------------------------
 
+def _check_partition_knob(cfg: GCNConfig, relabel) -> None:
+    """``cfg.partition`` and the relabel map travel together or not at all:
+    an islandized partition without the map (or vice versa) would silently
+    aggregate the wrong rows, so mismatches fail loudly at trace time."""
+    if cfg.partition not in ("interval", "island"):
+        raise ValueError(f"unknown cfg.partition {cfg.partition!r} "
+                         "(expected 'interval' or 'island')")
+    if (cfg.partition == "island") != (relabel is not None):
+        raise ValueError(
+            "cfg.partition='island' requires the IslandPartition relabel map "
+            "(relabel=isl.relabel), and relabel= requires partition='island' "
+            f"— got partition={cfg.partition!r}, "
+            f"relabel={'set' if relabel is not None else 'None'}")
+
+
 def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
                      cfg: GCNConfig, *, mesh: Optional[Mesh] = None,
-                     impl: Optional[str] = None):
+                     impl: Optional[str] = None, relabel=None):
     """feats: (P, part, F) owner-sharded. Returns (P, part, C) logits.
 
     ``impl`` overrides ``cfg.impl`` when given (the benchmarks sweep it).
@@ -83,7 +111,14 @@ def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
     every layer's aggregation (and, as a VJP residual, by the backward
     pass) — the paper's idle-skip buffer content is per (partition, batch),
     not per layer.
+
+    With ``cfg.partition="island"`` the inputs live in the islandized id
+    space (``partition_graph(..., method="island")``) and ``relabel`` is the
+    old→new map; the output is un-permuted back so row ``v`` of the
+    flattened result is original vertex ``v``'s logits (pad rows zeroed),
+    making islandized ≡ interval bit-exact row-for-row over ``[0, V)``.
     """
+    _check_partition_knob(cfg, relabel)
     impl_r = impl or cfg.impl
     use_sched = (impl_r == "pallas") if cfg.scheduled is None else cfg.scheduled
     sched, applied = None, False
@@ -112,7 +147,19 @@ def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
             agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
         h = jnp.concatenate([h, agg], axis=-1)
         h = jax.nn.relu(jnp.einsum("pvf,fh->pvh", h, params[f"w{i}"]) + params[f"b{i}"])
-    return jnp.einsum("pvh,hc->pvc", h, params["w_out"]) + params["b_out"]
+    out = jnp.einsum("pvh,hc->pvc", h, params["w_out"]) + params["b_out"]
+    if relabel is not None:
+        # un-permute: islandized row relabel[v] holds original vertex v.
+        # Interval mode places vertex v at flat row v exactly (owner = v //
+        # part, local = v % part), so after this gather the two layouts
+        # agree row-for-row on [0, V); the replicated gather stays off the
+        # data axis (host-permutation bookkeeping, not a collective).
+        P_, psz, C = out.shape
+        flat = out.reshape(P_ * psz, C)
+        orig = jnp.take(flat, jnp.asarray(relabel, jnp.int32), axis=0)
+        flat = jnp.zeros_like(flat).at[: orig.shape[0]].set(orig)
+        out = flat.reshape(P_, psz, C)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -131,7 +178,7 @@ def lookup_rows(feats, ids, *, mesh=None, dataflow="cgtrans", impl="xla",
 
 
 def sage_forward(params, feats, batch, cfg: GCNConfig, *,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None, relabel=None):
     """2-layer minibatch GraphSAGE.
 
     batch (all seed-sharded on the data axis, leading dim P):
@@ -149,7 +196,20 @@ def sage_forward(params, feats, batch, cfg: GCNConfig, *,
     gather, result all_to_all and backward cotangent scatter —
     collectives-per-step 2 → 1 vs the two-body form, bit-exact both ways
     (``tests/test_cgtrans_coalesce.py``).
+
+    With ``cfg.partition="island"`` the feature table is islandized
+    (``IslandPartition.relabel_rows`` order) and ``relabel`` translates the
+    batch's caller-visible vertex ids into that space at entry. Outputs are
+    positional per seed — no un-permute needed — so islandized ≡ interval
+    bit-exact (identical rows fetched in identical order).
     """
+    _check_partition_knob(cfg, relabel)
+    if relabel is not None:
+        r = jnp.asarray(relabel, jnp.int32)
+        batch = dict(batch,
+                     seeds=jnp.take(r, batch["seeds"]),
+                     nbrs1=jnp.take(r, batch["nbrs1"]),
+                     nbrs2=jnp.take(r, batch["nbrs2"]))
     Pn, B = batch["seeds"].shape
     K1 = batch["nbrs1"].shape[-1]
 
@@ -194,8 +254,8 @@ def sage_forward(params, feats, batch, cfg: GCNConfig, *,
 
 
 def sage_loss(params, feats, batch, cfg: GCNConfig, *,
-              mesh: Optional[Mesh] = None):
-    logits = sage_forward(params, feats, batch, cfg, mesh=mesh)
+              mesh: Optional[Mesh] = None, relabel=None):
+    logits = sage_forward(params, feats, batch, cfg, mesh=mesh, relabel=relabel)
     labels = batch["labels"]                  # (P, B)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]

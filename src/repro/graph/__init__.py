@@ -1,4 +1,7 @@
-from repro.graph.partition import PartitionedGraph, partition_by_src
+from repro.graph.partition import (IslandPartition, PartitionedGraph,
+                                   interval_size, islandize, partition_by_src,
+                                   partition_graph, relabel_graph,
+                                   remote_destination_rows)
 from repro.graph.sampling import (device_sample, host_sample,
                                   host_sample_csr)
 from repro.graph.structure import COOGraph
@@ -6,8 +9,10 @@ from repro.graph.synthetic import (TABLE_II, clustered_graph, rmat,
                                   table2_like, uniform_graph)
 
 __all__ = [
-    "PartitionedGraph", "partition_by_src", "device_sample", "host_sample",
-    "host_sample_csr",
+    "IslandPartition", "PartitionedGraph", "interval_size", "islandize",
+    "partition_by_src", "partition_graph", "relabel_graph",
+    "remote_destination_rows",
+    "device_sample", "host_sample", "host_sample_csr",
     "COOGraph", "TABLE_II", "clustered_graph", "rmat", "table2_like",
     "uniform_graph",
 ]

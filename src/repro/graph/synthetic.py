@@ -45,6 +45,22 @@ def rmat(scale: int, edge_factor: int = 16, *, a=0.57, b=0.19, c=0.19,
     return COOGraph(n, src.astype(np.int32), dst.astype(np.int32), w)
 
 
+def _cluster_bounds(n_vertices: int, n_clusters: int):
+    """(starts, sizes) of contiguous clusters covering every vertex.
+
+    ``n_vertices % n_clusters`` remainder vertices are spread one-per-cluster
+    over the first clusters (sizes differ by at most 1), and the cluster
+    count is capped at ``n_vertices`` so no cluster is empty.
+    """
+    C = max(min(n_clusters, n_vertices), 1)
+    base, extra = divmod(n_vertices, C)
+    sizes = np.full(C, base, np.int64)
+    sizes[:extra] += 1
+    starts = np.zeros(C, np.int64)
+    np.cumsum(sizes[:-1], out=starts[1:])
+    return starts, sizes
+
+
 def clustered_graph(n_vertices: int, n_edges: int, *, n_clusters: int = 8,
                     p_intra: float = 0.9, seed: int = 0, n_features: int = 0,
                     weights: bool = False) -> COOGraph:
@@ -57,16 +73,26 @@ def clustered_graph(n_vertices: int, n_edges: int, *, n_clusters: int = 8,
     skips almost every off-diagonal round. Uniform graphs are its adversary
     — every tile touches every block. Benchmarks and the idle-skip counter
     tests use this generator to demonstrate skipped tiles.
+
+    Cluster sizes differ by at most one vertex (``_cluster_bounds``): the old
+    ``V // C`` + clamp-to-``V-1`` scheme left the ``V % C`` remainder vertices
+    with zero edge mass, and when ``C > V`` it piled every out-of-range
+    cluster's mass onto vertex ``V-1``, skewing the degree distribution the
+    skip-rate bench depends on.
     """
     rng = np.random.default_rng(seed)
-    cs = max(n_vertices // n_clusters, 1)
-    c_src = rng.integers(0, n_clusters, n_edges)
+    starts, sizes = _cluster_bounds(n_vertices, n_clusters)
+    C = len(sizes)
+    c_src = rng.integers(0, C, n_edges)
     c_dst = np.where(rng.random(n_edges) < p_intra,
-                     c_src, rng.integers(0, n_clusters, n_edges))
-    src = (c_src * cs + rng.integers(0, cs, n_edges)).astype(np.int32)
-    dst = (c_dst * cs + rng.integers(0, cs, n_edges)).astype(np.int32)
-    src = np.minimum(src, n_vertices - 1)
-    dst = np.minimum(dst, n_vertices - 1)
+                     c_src, rng.integers(0, C, n_edges))
+    # uniform offset within each edge's own cluster: floor(u · size) with
+    # u ∈ [0, 1) is exact per variable-size cluster, where a shared
+    # integers(0, cs) draw was only valid for equal-size clusters
+    src = (starts[c_src]
+           + (rng.random(n_edges) * sizes[c_src]).astype(np.int64)).astype(np.int32)
+    dst = (starts[c_dst]
+           + (rng.random(n_edges) * sizes[c_dst]).astype(np.int64)).astype(np.int32)
     w = rng.random(n_edges).astype(np.float32) + 0.05 if weights else None
     feats = (rng.standard_normal((n_vertices, n_features)).astype(np.float32)
              if n_features else None)

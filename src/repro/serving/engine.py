@@ -53,7 +53,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core import cgtrans, gas
+from repro.graph.partition import islandize
 from repro.graph.sampling import host_sample_csr
+from repro.graph.structure import COOGraph
 from repro.runtime.health import Heartbeat, StepMonitor
 from repro.serving.cache import HotVertexCache
 from repro.serving.queue import RequestQueue, ServeRequest
@@ -79,6 +81,14 @@ class ServingEngine:
     baseline — same results, N× the finds and collectives; it exists so the
     serving tier and the bench can assert the ratio, not for production
     use.
+
+    ``partition="island"`` islandizes the table layout at build time
+    (``repro.graph.partition.islandize`` over the CSR adjacency): seed and
+    neighbor ids are translated through the relabel map as they enter the
+    command block and results return positionally (already in caller id
+    order), so ``HotVertexCache`` keys, tenant results, and the entire
+    caller API stay in original vertex ids — bit-exact with
+    ``partition="interval"``, asserted by the `part` tier with the cache on.
     """
 
     SHARED = -1   # tenant tag reserved for engine-owned (non-caller) segments
@@ -104,6 +114,7 @@ class ServingEngine:
         clock: Callable[[], float] = time.monotonic,
         sample_seed: int = 0,
         wire: str = "f32",
+        partition: str = "interval",
     ):
         # serve whatever float dtype the table arrives in (bf16 tables are
         # the embed_lookup transport norm); only non-float tables coerce to
@@ -125,10 +136,34 @@ class ServingEngine:
             raise ValueError(
                 f"V={self.n_vertices} must divide the data axis "
                 f"({self.n_shards}-way) — pad the table at load time")
-        self.feats = jnp.asarray(feats).reshape(
-            self.n_shards, self.n_vertices // self.n_shards, self.n_features)
         self.indptr = np.asarray(indptr, np.int64)
         self.indices = np.asarray(indices, np.int64)
+        if partition not in ("interval", "island"):
+            raise ValueError(f"unknown partition {partition!r} "
+                             "(expected 'interval' or 'island')")
+        self.partition = partition
+        self.islands = None
+        self._relabel: Optional[np.ndarray] = None
+        if partition == "island":
+            # islandize the table layout ONCE at engine build (host-side,
+            # like the edge schedule): shard p then owns a community, so
+            # fused command blocks from locality-coherent callers touch
+            # fewer remote shards. The CSR stays in ORIGINAL id space —
+            # sampling, the hot cache, and every caller-visible id are
+            # untouched; only the table rows and the ids entering the
+            # command block live in the islandized space
+            # (``_request_segments`` translates at enqueue, and results
+            # scatter back positionally, i.e. already un-relabeled).
+            src = np.repeat(np.arange(self.n_vertices, dtype=np.int32),
+                            np.diff(self.indptr))
+            isl = islandize(
+                COOGraph(self.n_vertices, src, self.indices.astype(np.int32)),
+                self.n_shards, pad_multiple=1)
+            self.islands = isl
+            self._relabel = isl.relabel
+            feats = isl.relabel_rows(feats)
+        self.feats = jnp.asarray(feats).reshape(
+            self.n_shards, self.n_vertices // self.n_shards, self.n_features)
         self.fanout = int(fanout)
         self.op = op
         self.dataflow = dataflow
@@ -229,8 +264,17 @@ class ServingEngine:
         else:
             cached_rows = None
             hit = np.zeros(req.seeds.shape[0], bool)
-        lookup = (req.seeds[:, None].astype(np.int32), ~hit[:, None])
-        fan = (req.nbrs.astype(np.int32), req.mask)
+        lookup_ids = req.seeds[:, None].astype(np.int32)
+        fan_ids = req.nbrs.astype(np.int32)
+        if self._relabel is not None:
+            # translate caller-visible ids into the islandized table space
+            # at the command-block door; rows come back positionally (one
+            # row per requested id), so no un-relabel is needed on
+            # scatter-back and the cache above stays keyed on original ids
+            lookup_ids = self._relabel[lookup_ids]
+            fan_ids = self._relabel[fan_ids]
+        lookup = (lookup_ids, ~hit[:, None])
+        fan = (fan_ids, req.mask)
         return lookup, fan, cached_rows, hit
 
     def _build_blocks(self, reqs: List[ServeRequest]):

@@ -44,7 +44,8 @@ from repro.compat import shard_map
 
 
 def make_sage_train_step(cfg, tc: TrainConfig, *, feats,
-                         mesh: Optional[Mesh] = None) -> Callable:
+                         mesh: Optional[Mesh] = None,
+                         relabel=None) -> Callable:
     """(state, batch) → (state, metrics) for GraphSAGE + CGTrans training.
 
     ``cfg`` is a ``repro.core.gcn.GCNConfig`` — its ``dataflow``, ``impl``,
@@ -59,13 +60,19 @@ def make_sage_train_step(cfg, tc: TrainConfig, *, feats,
     gather for the scatter — so the reverse pass never leaves the regime
     the forward models. Per-step gradient parity with ``impl="xla"`` is
     locked in by ``tests/test_cgtrans_grad.py``.
+
+    With ``cfg.partition="island"``, ``feats`` must be the islandized table
+    (``IslandPartition.relabel_rows`` order) and ``relabel`` the old→new id
+    map; every batch's caller-visible ids are translated at the
+    ``sage_loss`` entry (islandized ≡ interval bit-exact, grads included).
     """
     from repro.core.gcn import sage_loss
     from repro.optim import adamw_update
 
     def train_step(state, batch):
         (loss, metrics), grads = jax.value_and_grad(
-            lambda p: sage_loss(p, feats, batch, cfg, mesh=mesh),
+            lambda p: sage_loss(p, feats, batch, cfg, mesh=mesh,
+                                relabel=relabel),
             has_aux=True)(state["params"])
         new_p, new_opt, om = adamw_update(state["params"], grads,
                                           state["opt"], tc)

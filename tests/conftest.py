@@ -42,6 +42,17 @@ def wire_parity_report():
 
 
 @pytest.fixture(scope="session")
+def island_parity_report():
+    """The islandized-partition matrix on the real 8-way mesh (islandized ≡
+    interval bit-exact values AND gradients on integer data across
+    dataflow × op × impl, sage + one optimizer step, the serving engine
+    with the cache on, and the counted locality reductions) — run ONCE per
+    session; tests/test_partition.py asserts each cell against this shared
+    stdout."""
+    return run_distributed_case("islandized_parity", timeout=900)
+
+
+@pytest.fixture(scope="session")
 def grad_parity_report():
     """The GRADIENT differential matrix on the real 8-way mesh (plus the
     3-step pallas-vs-xla train parity) — run ONCE per session (each cell is

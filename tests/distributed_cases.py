@@ -821,6 +821,221 @@ def case_pipeline_parallel():
     print("pipeline parallel ok")
 
 
+def case_islandized_parity():
+    """Islandized ≡ interval on a REAL 8-way mesh, plus the counted wins.
+
+    The graph is the adversarial case: a clustered_graph whose vertex ids
+    are SCRAMBLED, so the contiguous-interval split gets zero locality while
+    ``islandize`` recovers the communities. Edges are deduplicated and the
+    integer feature table is per-column injective over vertices, so max/min
+    have a unique winner per (destination, column) — the even-split tie
+    convention then never mixes non-dyadic fractions and every gradient sum
+    is an integer, making bit-exactness hold under any edge reordering.
+
+    Cells (tests/test_partition.py parses the lines):
+    * values: aggregate_edges island ≡ interval, un-permuted, across
+      dataflow × op × impl;
+    * grads: d/d_feats of a masked integer-cotangent loss, same matrix
+      (add/max);
+    * sage_forward island ≡ interval (and one optimizer step through
+      make_sage_train_step(relabel=), bit-exact params);
+    * ServingEngine(partition="island") ≡ interval with the hot cache ON;
+    * counted locality: remote destination rows and dense occupancy rounds
+      both strictly reduced.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import cgtrans
+    from repro.core.gcn import GCNConfig, gcn_schema, sage_forward
+    from repro.graph import (COOGraph, clustered_graph, partition_by_src,
+                             partition_graph, remote_destination_rows)
+    from repro.kernels.gas_scatter import ops as gas_ops
+    from repro.launch.mesh import make_data_mesh
+
+    mesh = make_data_mesh(8)
+    rng = np.random.default_rng(0)
+    V, E0, F = 256, 2048, 8
+    g0 = clustered_graph(V, E0, n_clusters=8, p_intra=0.92, seed=3)
+    perm = rng.permutation(V).astype(np.int32)
+    src, dst = perm[g0.src], perm[g0.dst]
+    # dedupe (src, dst) pairs: duplicate edges are exact max/min ties whose
+    # even-split backward would go non-dyadic
+    pairs = np.unique(np.stack([src, dst], 1), axis=0)
+    # per-column injective integer features: column f holds v - 128 + f with
+    # alternating sign, so every destination's max/min winner is unique
+    feats = ((np.arange(V)[:, None] - V // 2 + np.arange(F)[None, :])
+             * np.where(np.arange(F) % 2 == 0, 1.0, -1.0)).astype(np.float32)
+    g = COOGraph(V, pairs[:, 0].astype(np.int32),
+                 pairs[:, 1].astype(np.int32), None, feats)
+
+    pg_i, _ = partition_graph(g, 8, method="interval")
+    pg_s, isl = partition_graph(g, 8, method="island")
+    assert isl is not None and pg_i.part_size == pg_s.part_size
+    part = pg_i.part_size
+
+    # -- counted locality: both reductions strict on the 8-way mesh ---------
+    # (counted on a graph big enough for several 128-row blocks per shard —
+    # the parity graph above keeps the matrix cheap, but its 2-block row
+    # grid saturates the dense occupancy in both layouts)
+    gl0 = clustered_graph(1024, 8192, n_clusters=8, p_intra=0.95, seed=3)
+    permL = np.random.default_rng(1003).permutation(1024).astype(np.int32)
+    gl = COOGraph(1024, permL[gl0.src], permL[gl0.dst])
+    lpg_i, _ = partition_graph(gl, 8, method="interval")
+    lpg_s, _ = partition_graph(gl, 8, method="island")
+    rr_i = remote_destination_rows(lpg_i)
+    rr_s = remote_destination_rows(lpg_s)
+    assert int(rr_s.sum()) < int(rr_i.sum()), (rr_i, rr_s)
+    assert int(rr_s.max()) < int(rr_i.max()), (rr_i, rr_s)
+    print(f"island locality remote_rows interval={int(rr_i.sum())} "
+          f"island={int(rr_s.sum())} ok")
+
+    def dense_live(pg):
+        live = 0
+        for p in range(8):
+            l, _ = gas_ops.dense_skip_stats(
+                jnp.asarray(pg.dst[p]), jnp.asarray(pg.mask[p]),
+                8 * pg.part_size)
+            live += int(l)
+        return live
+
+    dl_i, dl_s = dense_live(lpg_i), dense_live(lpg_s)
+    assert dl_s < dl_i, (dl_i, dl_s)
+    print(f"island locality dense_rounds interval={dl_i} island={dl_s} ok")
+
+    def exact(a, b, tag):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(tag))
+
+    def unpermute(flat_rows):
+        """(8·part, F) islandized rows → original vertex order, rows [0, V)."""
+        return np.asarray(flat_rows).reshape(8 * part, -1)[isl.relabel]
+
+    args_i = (jnp.asarray(pg_i.features), jnp.asarray(pg_i.src),
+              jnp.asarray(pg_i.dst), jnp.asarray(pg_i.weights),
+              jnp.asarray(pg_i.mask))
+    args_s = (jnp.asarray(pg_s.features), jnp.asarray(pg_s.src),
+              jnp.asarray(pg_s.dst), jnp.asarray(pg_s.weights),
+              jnp.asarray(pg_s.mask))
+
+    # -- values: dataflow × op × impl ---------------------------------------
+    agg = jax.jit(
+        lambda a, flow, op, impl: cgtrans.aggregate_edges(
+            *a, mesh=mesh, dataflow=flow, op=op, impl=impl),
+        static_argnums=(1, 2, 3))
+    for flow in ("cgtrans", "baseline"):
+        for op in ("add", "max", "min"):
+            for impl in ("xla", "pallas"):
+                out_i = np.asarray(agg(args_i, flow, op, impl))
+                out_s = np.asarray(agg(args_s, flow, op, impl))
+                exact(out_i.reshape(8 * part, F)[:V],
+                      unpermute(out_s), (flow, op, impl))
+                print(f"island parity path=edges flow={flow} op={op} "
+                      f"impl={impl} ok")
+
+    # -- grads: d/d_feats of an integer-cotangent loss, add/max -------------
+    u = rng.integers(-3, 4, (V, F)).astype(np.float32)
+    u_i = np.zeros((8 * part, F), np.float32)
+    u_i[:V] = u
+    u_s = np.zeros((8 * part, F), np.float32)
+    u_s[:V] = u[isl.inverse]                # cotangent follows its vertex
+    u_i, u_s = (jnp.asarray(u_i.reshape(8, part, F)),
+                jnp.asarray(u_s.reshape(8, part, F)))
+
+    def loss(f, rest, ct, flow, op, impl):
+        out = cgtrans.aggregate_edges(f, *rest, mesh=mesh, dataflow=flow,
+                                      op=op, impl=impl)
+        return jnp.sum(jnp.where(jnp.isfinite(out), out, 0.0) * ct)
+
+    dgrad = jax.jit(jax.grad(loss), static_argnums=(3, 4, 5))
+    for flow in ("cgtrans", "baseline"):
+        for op in ("add", "max"):
+            for impl in ("xla", "pallas"):
+                g_i = np.asarray(dgrad(args_i[0], args_i[1:], u_i,
+                                       flow, op, impl))
+                g_s = np.asarray(dgrad(args_s[0], args_s[1:], u_s,
+                                       flow, op, impl))
+                exact(g_i.reshape(8 * part, F)[:V],
+                      unpermute(g_s.reshape(8 * part, F)),
+                      ("grad", flow, op, impl))
+                print(f"island parity grad flow={flow} op={op} "
+                      f"impl={impl} ok")
+
+    # -- sage_forward + one optimizer step ----------------------------------
+    import dataclasses as _dc
+
+    from repro.common.config import TrainConfig
+    from repro.common.schema import init_params
+    from repro.optim import adamw_init
+    from repro.train import make_sage_train_step
+
+    B, K1, K2 = 4, 3, 3
+    cfg_i = GCNConfig(n_features=F, hidden=16, n_classes=4, fanout=K1)
+    cfg_s = _dc.replace(cfg_i, partition="island")
+    batch = {
+        "seeds": jnp.asarray(rng.integers(0, V, (8, B)).astype(np.int32)),
+        "nbrs1": jnp.asarray(rng.integers(0, V, (8, B, K1)).astype(np.int32)),
+        "mask1": jnp.asarray(rng.random((8, B, K1)) < 0.8),
+        "nbrs2": jnp.asarray(
+            rng.integers(0, V, (8, B * (1 + K1), K2)).astype(np.int32)),
+        "mask2": jnp.asarray(rng.random((8, B * (1 + K1), K2)) < 0.8),
+        "labels": jnp.asarray(rng.integers(0, 4, (8, B)).astype(np.int32)),
+    }
+    params = init_params(gcn_schema(cfg_i), jax.random.PRNGKey(0))
+    t_i = jnp.asarray(pg_i.features)
+    t_s = jnp.asarray(pg_s.features)
+    for impl in ("xla", "pallas"):
+        ci = _dc.replace(cfg_i, impl=impl)
+        cs = _dc.replace(cfg_s, impl=impl)
+        o_i = jax.jit(lambda p, f: sage_forward(p, f, batch, ci, mesh=mesh)
+                      )(params, t_i)
+        o_s = jax.jit(lambda p, f: sage_forward(
+            p, f, batch, cs, mesh=mesh, relabel=isl.relabel))(params, t_s)
+        exact(o_i, o_s, ("sage", impl))
+    tc = TrainConfig(learning_rate=1e-2, warmup_steps=0, total_steps=1,
+                     weight_decay=0.0)
+    snaps = {}
+    for name, cfg, t, rl in (("interval", cfg_i, t_i, None),
+                             ("island", cfg_s, t_s, isl.relabel)):
+        p0 = init_params(gcn_schema(cfg_i), jax.random.PRNGKey(1))
+        st = {"params": p0, "opt": adamw_init(p0, tc),
+              "step": jnp.zeros((), jnp.int32)}
+        step = jax.jit(make_sage_train_step(cfg, tc, feats=t, mesh=mesh,
+                                            relabel=rl))
+        st, _m = step(st, batch)
+        snaps[name] = jax.tree.map(np.asarray, st["params"])
+    for k in snaps["interval"]:
+        exact(snaps["interval"][k], snaps["island"][k], ("train", k))
+    print("island sage parity ok")
+
+    # -- serving: cache ON, fused blocks, tenants — original-id API --------
+    from repro.serving import ServingEngine
+
+    indptr, indices, _ = g.to_csr()
+    # integer-valued serve table: the fan-out segment's partial sums group
+    # by owner shard, which the relabeling changes — integer addition is
+    # order-invariant, float addition only to 1 ulp
+    sfeats = np.round(rng.standard_normal((V, F)) * 5.0).astype(np.float32)
+    kw = dict(fanout=4, mesh=mesh, max_batch=8, max_delay_s=1e9,
+              cache_capacity=32)
+    eng_i = ServingEngine(sfeats, indptr, indices, **kw)
+    eng_s = ServingEngine(sfeats, indptr, indices, partition="island", **kw)
+    seeds = [3, 9, 3, 17, 40, 9, 77, 130]
+    for _wave in range(2):                     # wave 2 exercises cache hits
+        rids = [(eng_i.submit([s]), eng_s.submit([s])) for s in seeds]
+        eng_i.flush()
+        eng_s.flush()
+        for ri, rs in rids:
+            a, b = eng_i.result(ri), eng_s.result(rs)
+            exact(a.self_rows, b.self_rows, ("serve self", ri))
+            exact(a.agg_rows, b.agg_rows, ("serve agg", ri))
+            exact(a.from_cache, b.from_cache, ("serve cache", ri))
+    assert eng_i.cache.snapshot() == eng_s.cache.snapshot()
+    assert eng_s.cache.snapshot()["hits"] > 0
+    print("island serving parity cache=on ok")
+
+    print("islandized parity ok")
+
+
 CASES = {n[len("case_"):]: f for n, f in list(globals().items())
          if n.startswith("case_")}
 

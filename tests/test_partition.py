@@ -1,0 +1,504 @@
+"""The partitioning tier: islandized locality ≡ interval, counted and exact.
+
+Three layers:
+
+* host-side invariants — ``islandize``'s relabeling is a permutation whose
+  island packing aligns with ``partition_by_src``'s interval cut, the
+  vectorized partitioner matches a loop reference on arbitrary graphs (and
+  its degenerate shapes are pinned), and the synthetic generators honor
+  their contracts (ids in range, determinism, ``p_intra``, remainder
+  clusters carrying real mass);
+* single-process parity — islandized ≡ interval bit-exact through
+  ``gcn_forward_full`` (values AND grads on integer data), ``sage_forward``,
+  and the ``ServingEngine`` with the hot cache on;
+* the 8-way subprocess matrix (``distributed_cases.case_islandized_parity``
+  via the ``island_parity_report`` session fixture) — the same claims on a
+  real sharded mesh across dataflow × impl × op, plus the counted locality
+  reductions (remote destination rows, dense occupancy rounds).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.graph import (COOGraph, clustered_graph, interval_size, islandize,
+                         partition_by_src, partition_graph, relabel_graph,
+                         remote_destination_rows, rmat, uniform_graph)
+
+pytestmark = pytest.mark.partition
+
+
+def _shuffled_clustered(V, E, *, n_clusters, p_intra, seed, **kw):
+    """A community graph whose vertex ids are scrambled — the adversarial
+    case where the contiguous-interval split gets zero locality."""
+    g = clustered_graph(V, E, n_clusters=n_clusters, p_intra=p_intra,
+                        seed=seed, **kw)
+    perm = np.random.default_rng(seed + 1000).permutation(V).astype(np.int32)
+    feats = None if g.features is None else g.features[np.argsort(perm)]
+    return COOGraph(V, perm[g.src], perm[g.dst], g.weights, feats)
+
+
+# ---------------------------------------------------------------------------
+# vectorized partition_by_src: loop-reference parity + degenerate shapes
+# ---------------------------------------------------------------------------
+
+def _partition_loop_reference(g, n_parts, pad_multiple=8):
+    """The pre-vectorization per-partition fill loop, kept as the oracle."""
+    V = g.n_vertices
+    part = interval_size(V, n_parts, pad_multiple=pad_multiple)
+    owner = g.src // part
+    order = np.argsort(owner, kind="stable")
+    src, dst = g.src[order], g.dst[order]
+    w = g.weights[order] if g.weights is not None else np.ones_like(src, np.float32)
+    counts = np.bincount(owner, minlength=n_parts)
+    e_max = max(int(counts.max()), 1)
+    e_max = -(-e_max // pad_multiple) * pad_multiple
+    ps = np.zeros((n_parts, e_max), np.int32)
+    pd = np.zeros((n_parts, e_max), np.int32)
+    pw = np.zeros((n_parts, e_max), np.float32)
+    pm = np.zeros((n_parts, e_max), bool)
+    off = 0
+    for p in range(n_parts):
+        c = int(counts[p])
+        ps[p, :c] = src[off:off + c] - p * part
+        pd[p, :c] = dst[off:off + c]
+        pw[p, :c] = w[off:off + c]
+        pm[p, :c] = True
+        off += c
+    feats = None
+    if g.features is not None:
+        F = g.features.shape[1]
+        feats = np.zeros((n_parts, part, F), g.features.dtype)
+        for p in range(n_parts):
+            lo, hi = p * part, min((p + 1) * part, V)
+            if lo < V:
+                feats[p, : hi - lo] = g.features[lo:hi]
+    return ps, pd, pw, pm, feats
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 80), m=st.integers(0, 400),
+       p=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 1000))
+def test_vectorized_partition_matches_loop_reference(n, m, p, seed):
+    g = uniform_graph(n, m, seed=seed, weights=True, n_features=3)
+    pg = partition_by_src(g, p)
+    ps, pd, pw, pm, feats = _partition_loop_reference(g, p)
+    np.testing.assert_array_equal(pg.src, ps)
+    np.testing.assert_array_equal(pg.dst, pd)
+    np.testing.assert_array_equal(pg.weights, pw)
+    np.testing.assert_array_equal(pg.mask, pm)
+    np.testing.assert_array_equal(pg.features, feats)
+
+
+def test_partition_more_parts_than_vertices():
+    """V=5 over 8 parts: the padded interval is 8 wide, so shard 0 owns
+    everything and shards 1..7 are empty tails — valid shapes, no edges,
+    zero features."""
+    g = uniform_graph(5, 40, seed=0, n_features=2)
+    pg = partition_by_src(g, 8)
+    assert pg.part_size == 8
+    assert int(pg.mask[0].sum()) == 40
+    assert not pg.mask[1:].any()
+    np.testing.assert_array_equal(pg.features[0, :5], g.features)
+    assert not pg.features[1:].any() and not pg.features[0, 5:].any()
+
+
+def test_partition_empty_graph_with_empty_vertex_set():
+    """V=0 (a shard pool before any table is loaded) partitions to fully
+    padded, fully masked arrays instead of a divide-by-zero."""
+    g = COOGraph(0, np.zeros(0, np.int32), np.zeros(0, np.int32))
+    pg = partition_by_src(g, 4)
+    assert pg.src.shape[0] == 4 and pg.e_max >= 1
+    assert not pg.mask.any()
+
+
+def test_partition_pad_inflation_leaves_trailing_owners_vertexless():
+    """V=10 over 4 parts pads the interval to 8, so owners 2 and 3 exist in
+    the shard grid but own no vertices: no edges, all-zero feature rows, and
+    the first two shards carry the whole graph."""
+    g = uniform_graph(10, 120, seed=1, n_features=3, weights=True)
+    pg = partition_by_src(g, 4)
+    assert pg.part_size == 8
+    assert not pg.mask[2:].any()
+    assert int(pg.mask.sum()) == 120
+    assert not pg.features[2:].any()
+    flat = pg.features.reshape(-1, 3)
+    np.testing.assert_array_equal(flat[:10], g.features)
+    # owner placement of every edge survives the pad inflation
+    for p in range(2):
+        m = pg.mask[p]
+        glob = pg.src[p][m] + p * 8
+        assert np.all(glob // 8 == p)
+
+
+def test_interval_size_shared_helper():
+    """``partition_by_src`` and ``islandize`` must cut at the same boundary;
+    the shared helper is that contract."""
+    for V, P, pad in [(100, 4, 8), (5, 8, 8), (256, 8, 1), (0, 2, 8)]:
+        assert interval_size(V, P, pad_multiple=pad) >= 1
+        g = uniform_graph(max(V, 1), 10, seed=0)
+        if V:
+            pg = partition_by_src(COOGraph(V, g.src % V, g.dst % V), P,
+                                  pad_multiple=pad)
+            assert pg.part_size == interval_size(V, P, pad_multiple=pad)
+            isl = islandize(COOGraph(V, g.src % V, g.dst % V), P,
+                            pad_multiple=pad)
+            assert isl.part_size == pg.part_size
+
+
+# ---------------------------------------------------------------------------
+# islandize invariants
+# ---------------------------------------------------------------------------
+
+def test_islandize_relabel_is_permutation():
+    g = _shuffled_clustered(200, 1600, n_clusters=8, p_intra=0.9, seed=2)
+    isl = islandize(g, 4)
+    np.testing.assert_array_equal(np.sort(isl.relabel), np.arange(200))
+    np.testing.assert_array_equal(isl.relabel[isl.inverse], np.arange(200))
+    np.testing.assert_array_equal(isl.inverse[isl.relabel], np.arange(200))
+    assert isl.n_islands >= 1
+    assert isl.island_of.min() >= 0 and isl.island_of.max() < isl.n_islands
+
+
+def test_islandize_deterministic():
+    g = _shuffled_clustered(150, 900, n_clusters=6, p_intra=0.85, seed=7)
+    a, b = islandize(g, 4), islandize(g, 4)
+    np.testing.assert_array_equal(a.relabel, b.relabel)
+
+
+def test_islandize_capacity_and_interval_alignment():
+    """No island exceeds one interval, and the packing fills every shard
+    interval before spilling into the next (the alignment contract with
+    ``partition_by_src``): vertices land densely in ``[0, V)`` new-id order
+    so shard p's interval holds whole islands or a single split slice."""
+    V, P = 300, 4
+    g = _shuffled_clustered(V, 2400, n_clusters=10, p_intra=0.9, seed=5)
+    isl = islandize(g, P)
+    sizes = np.bincount(isl.island_of, minlength=isl.n_islands)
+    assert sizes.max() <= isl.part_size
+    # dense packing: new ids are exactly [0, V) (no holes), so every shard
+    # interval before the tail is full
+    assert isl.relabel.min() == 0 and isl.relabel.max() == V - 1
+
+
+def test_relabel_graph_preserves_structure():
+    g = _shuffled_clustered(120, 800, n_clusters=6, p_intra=0.9, seed=9,
+                            n_features=4, weights=True)
+    isl = islandize(g, 4)
+    rg = relabel_graph(g, isl)
+    # same edges up to renaming, in the SAME stream order
+    np.testing.assert_array_equal(rg.src, isl.relabel[g.src])
+    np.testing.assert_array_equal(rg.dst, isl.relabel[g.dst])
+    np.testing.assert_array_equal(rg.weights, g.weights)
+    # feature rows follow their vertex
+    np.testing.assert_array_equal(rg.features[isl.relabel], g.features)
+    # round-trip helpers
+    np.testing.assert_array_equal(isl.unrelabel_rows(rg.features), g.features)
+    np.testing.assert_array_equal(isl.relabel_rows(g.features), rg.features)
+
+
+def test_islandize_reduces_remote_rows_and_dense_rounds():
+    """The counted locality claim, host-scale: on a shuffled-id clustered
+    graph the islandized partition strictly shrinks both the per-shard
+    remote destination rows (the all_to_all payload proxy) and the dense
+    (row-block × edge-tile) occupancy the idle-skip kernel would walk."""
+    import jax.numpy as jnp
+    from repro.kernels.gas_scatter import ops as gas_ops
+
+    # big enough that the row grid has several 128-row blocks per shard —
+    # below ~4 blocks the dense occupancy saturates in both layouts and the
+    # round counter cannot separate them
+    g = _shuffled_clustered(1024, 8192, n_clusters=8, p_intra=0.95, seed=3)
+    ways = 8
+    pg_i, _ = partition_graph(g, ways, method="interval")
+    pg_s, isl = partition_graph(g, ways, method="island")
+    assert isl is not None and pg_i.part_size == pg_s.part_size
+
+    rr_i, rr_s = remote_destination_rows(pg_i), remote_destination_rows(pg_s)
+    assert int(rr_s.sum()) < int(rr_i.sum())
+    assert int(rr_s.max()) < int(rr_i.max())
+
+    def dense_live(pg):
+        live = 0
+        for p in range(pg.n_parts):
+            l, _ = gas_ops.dense_skip_stats(jnp.asarray(pg.dst[p]),
+                                            jnp.asarray(pg.mask[p]),
+                                            pg.n_parts * pg.part_size)
+            live += int(l)
+        return live
+
+    assert dense_live(pg_s) < dense_live(pg_i)
+
+
+def test_partition_graph_unknown_method():
+    g = uniform_graph(16, 32, seed=0)
+    with pytest.raises(ValueError, match="unknown partition method"):
+        partition_graph(g, 2, method="metis")
+
+
+# ---------------------------------------------------------------------------
+# synthetic generator invariants (satellites: ids, determinism, p_intra,
+# remainder clusters, feature/weight round-trip)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda s: uniform_graph(97, 500, seed=s),
+    lambda s: clustered_graph(97, 500, n_clusters=6, seed=s),   # 97 % 6 != 0
+    lambda s: clustered_graph(5, 300, n_clusters=8, seed=s),    # C > V
+    lambda s: rmat(6, 8, seed=s),
+])
+def test_generator_ids_in_range_and_deterministic(make):
+    g1, g2, g3 = make(0), make(0), make(1)
+    for g in (g1, g3):
+        assert g.src.min() >= 0 and g.src.max() < g.n_vertices
+        assert g.dst.min() >= 0 and g.dst.max() < g.n_vertices
+    np.testing.assert_array_equal(g1.src, g2.src)
+    np.testing.assert_array_equal(g1.dst, g2.dst)
+    assert not (np.array_equal(g1.src, g3.src) and np.array_equal(g1.dst, g3.dst))
+
+
+def test_clustered_p_intra_within_tolerance():
+    """Fraction of intra-cluster edges ≈ p_intra + (1-p_intra)/C: the
+    explicit p_intra draws plus the uniform re-draws that land home."""
+    from repro.graph.synthetic import _cluster_bounds
+
+    V, E, C = 120, 40000, 6
+    for p_intra in (0.0, 0.5, 0.9):
+        g = clustered_graph(V, E, n_clusters=C, p_intra=p_intra, seed=4)
+        starts, sizes = _cluster_bounds(V, C)
+        cluster = np.searchsorted(starts, np.arange(V), side="right") - 1
+        frac = float((cluster[g.src] == cluster[g.dst]).mean())
+        want = p_intra + (1.0 - p_intra) / C
+        assert abs(frac - want) < 0.02, (p_intra, frac, want)
+
+
+def test_clustered_remainder_degree_mass():
+    """The regression the fix pins: remainder vertices (V % C != 0) carry
+    real edge mass instead of silently dropping out, and C > V no longer
+    piles every out-of-range cluster onto vertex V-1."""
+    # V % C = 6: the old V//C grid made vertices 1024..1029 unreachable
+    g = clustered_graph(1030, 16384, n_clusters=8, seed=0)
+    deg = g.degree_out() + g.degree_in()
+    assert deg[1024:].sum() > 0
+    assert deg.max() < 4 * deg.mean()
+    # C > V: the old clamp sent clusters 5..7 all to vertex 4
+    g2 = clustered_graph(5, 2000, n_clusters=8, seed=0)
+    deg2 = g2.degree_out() + g2.degree_in()
+    assert deg2.max() < 2 * deg2.mean()
+    assert deg2.min() > 0
+
+
+def test_cluster_bounds_cover_all_vertices():
+    from repro.graph.synthetic import _cluster_bounds
+
+    for V, C in [(10, 3), (5, 8), (8, 8), (1, 1), (1030, 8)]:
+        starts, sizes = _cluster_bounds(V, C)
+        assert sizes.sum() == V
+        assert sizes.max() - sizes.min() <= 1
+        assert starts[0] == 0
+        np.testing.assert_array_equal(starts[1:], np.cumsum(sizes)[:-1])
+
+
+def test_features_weights_roundtrip_partition():
+    g = clustered_graph(90, 700, n_clusters=5, p_intra=0.8, seed=6,
+                        n_features=4, weights=True)
+    pg = partition_by_src(g, 4)
+    # weight multiset conserved (exact — weights are copied, never summed)
+    assert sorted(pg.weights[pg.mask].tolist()) == sorted(g.weights.tolist())
+    # features land on the owner shard, bit for bit
+    flat = pg.features.reshape(-1, 4)
+    np.testing.assert_array_equal(flat[:90], g.features)
+    assert not flat[90:].any()
+
+
+# ---------------------------------------------------------------------------
+# single-process parity: islandized ≡ interval bit-exact
+# ---------------------------------------------------------------------------
+
+def _int_params(cfg, rng):
+    import jax.numpy as jnp
+    from repro.core.gcn import gcn_schema
+    return {k: jnp.asarray(rng.integers(-2, 3, d.shape).astype(np.float32))
+            for k, d in gcn_schema(cfg).items()}
+
+
+def test_gcn_forward_full_island_parity_values_and_grads():
+    """Full-graph islandized ≡ interval bit-exact on integer data — values
+    and parameter gradients — after the output un-permute (row v of the
+    flattened result is original vertex v in both layouts)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.gcn import GCNConfig, gcn_forward_full
+
+    rng = np.random.default_rng(0)
+    V, P, F, C = 96, 4, 6, 5
+    g = _shuffled_clustered(V, 768, n_clusters=8, p_intra=0.9, seed=3)
+    g.features = rng.integers(-3, 4, (V, F)).astype(np.float32)
+    cfg_i = GCNConfig(n_features=F, hidden=8, n_classes=C, aggregate="add")
+    cfg_s = dataclasses.replace(cfg_i, partition="island")
+    pg_i, _ = partition_graph(g, P, method="interval")
+    pg_s, isl = partition_graph(g, P, method="island")
+    params = _int_params(cfg_i, rng)
+
+    def run(p, pg, cfg, relabel):
+        return gcn_forward_full(
+            p, jnp.asarray(pg.features), jnp.asarray(pg.src),
+            jnp.asarray(pg.dst), jnp.asarray(pg.weights),
+            jnp.asarray(pg.mask), cfg, relabel=relabel)
+
+    out_i = np.asarray(run(params, pg_i, cfg_i, None)).reshape(-1, C)
+    out_s = np.asarray(run(params, pg_s, cfg_s, isl.relabel)).reshape(-1, C)
+    np.testing.assert_array_equal(out_i[:V], out_s[:V])
+
+    def loss(p, pg, cfg, relabel):
+        return run(p, pg, cfg, relabel).reshape(-1, C)[:V].sum()
+
+    g_i = jax.grad(loss)(params, pg_i, cfg_i, None)
+    g_s = jax.grad(loss)(params, pg_s, cfg_s, isl.relabel)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(g_i[k]), np.asarray(g_s[k]))
+
+
+def test_sage_forward_island_parity():
+    """Sampled-path islandized ≡ interval bit-exact (identical rows fetched
+    in identical order — holds even for float params)."""
+    import jax.numpy as jnp
+    from repro.core.gcn import GCNConfig, gcn_schema, sage_forward
+
+    rng = np.random.default_rng(1)
+    V, F, B, K1, K2 = 64, 5, 4, 3, 3
+    g = _shuffled_clustered(V, 512, n_clusters=4, p_intra=0.9, seed=2)
+    feats = rng.standard_normal((V, F)).astype(np.float32)
+    g.features = feats
+    cfg_i = GCNConfig(n_features=F, hidden=8, n_classes=4)
+    cfg_s = dataclasses.replace(cfg_i, partition="island")
+    isl = islandize(g, 1, pad_multiple=1)
+
+    batch = {
+        "seeds": jnp.asarray(rng.integers(0, V, (1, B)).astype(np.int32)),
+        "nbrs1": jnp.asarray(rng.integers(0, V, (1, B, K1)).astype(np.int32)),
+        "mask1": jnp.asarray(rng.random((1, B, K1)) < 0.8),
+        "nbrs2": jnp.asarray(
+            rng.integers(0, V, (1, B * (1 + K1), K2)).astype(np.int32)),
+        "mask2": jnp.asarray(rng.random((1, B * (1 + K1), K2)) < 0.8),
+    }
+    params = {k: jnp.asarray(rng.standard_normal(d.shape).astype(np.float32))
+              for k, d in gcn_schema(cfg_i).items()}
+    t_i = jnp.asarray(feats).reshape(1, V, F)
+    t_s = jnp.asarray(isl.relabel_rows(feats)).reshape(1, V, F)
+    o_i = sage_forward(params, t_i, batch, cfg_i)
+    o_s = sage_forward(params, t_s, batch, cfg_s, relabel=isl.relabel)
+    np.testing.assert_array_equal(np.asarray(o_i), np.asarray(o_s))
+
+
+def test_partition_knob_validation():
+    """The knob and the relabel map travel together — a mismatch is a loud
+    trace-time error, not a silent wrong-row aggregation."""
+    import jax.numpy as jnp
+    from repro.core.gcn import GCNConfig, sage_forward
+
+    cfg_island = GCNConfig(n_features=2, hidden=4, n_classes=2,
+                           partition="island")
+    cfg_interval = GCNConfig(n_features=2, hidden=4, n_classes=2)
+    cfg_bogus = GCNConfig(n_features=2, hidden=4, n_classes=2,
+                          partition="hash")
+    batch = {"seeds": jnp.zeros((1, 2), jnp.int32),
+             "nbrs1": jnp.zeros((1, 2, 2), jnp.int32),
+             "mask1": jnp.ones((1, 2, 2), bool),
+             "nbrs2": jnp.zeros((1, 6, 2), jnp.int32),
+             "mask2": jnp.ones((1, 6, 2), bool)}
+    feats = jnp.zeros((1, 8, 2))
+    with pytest.raises(ValueError, match="requires the IslandPartition"):
+        sage_forward({}, feats, batch, cfg_island)
+    with pytest.raises(ValueError, match="requires partition='island'"):
+        sage_forward({}, feats, batch, cfg_interval,
+                     relabel=np.arange(8, dtype=np.int32))
+    with pytest.raises(ValueError, match="unknown cfg.partition"):
+        sage_forward({}, feats, batch, cfg_bogus)
+
+
+@pytest.mark.serving
+def test_serving_engine_island_parity_with_cache():
+    """Two engines over the same graph — interval vs island layout, hot
+    cache ON — answer identical queries bit-exactly with identical cache
+    behavior, and the island engine's caller API stays in original ids."""
+    from repro.serving import ServingEngine
+
+    rng = np.random.default_rng(2)
+    V, F = 64, 5
+    g = _shuffled_clustered(V, 512, n_clusters=4, p_intra=0.9, seed=8)
+    feats = rng.standard_normal((V, F)).astype(np.float32)
+    indptr, indices, _ = g.to_csr()
+    kw = dict(fanout=4, max_batch=4, max_delay_s=1e9, cache_capacity=16)
+    eng_i = ServingEngine(feats, indptr, indices, **kw)
+    eng_s = ServingEngine(feats, indptr, indices, partition="island", **kw)
+    assert eng_s.islands is not None
+
+    seeds = [3, 9, 3, 17]
+    for _wave in range(2):                     # wave 2 hits the cache
+        rids = [(eng_i.submit([s]), eng_s.submit([s])) for s in seeds]
+        eng_i.flush()
+        eng_s.flush()
+        for ri, rs in rids:
+            a, b = eng_i.result(ri), eng_s.result(rs)
+            np.testing.assert_array_equal(a.self_rows, b.self_rows)
+            np.testing.assert_array_equal(a.agg_rows, b.agg_rows)
+            np.testing.assert_array_equal(a.from_cache, b.from_cache)
+    assert eng_i.cache.snapshot() == eng_s.cache.snapshot()
+    # the cache is keyed on caller-visible ids in BOTH engines — the
+    # islandized engine never leaks relabeled ids into the cache key space
+    for s in set(seeds):
+        assert s in eng_s.cache and s in eng_i.cache
+
+
+def test_serving_engine_rejects_unknown_partition():
+    from repro.serving import ServingEngine
+
+    feats = np.zeros((8, 2), np.float32)
+    indptr = np.zeros(9, np.int64)
+    indices = np.zeros(0, np.int64)
+    with pytest.raises(ValueError, match="unknown partition"):
+        ServingEngine(feats, indptr, indices, partition="hash")
+
+
+# ---------------------------------------------------------------------------
+# the 8-way subprocess matrix (session fixture runs it once)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.distributed
+def test_islandized_parity_on_mesh(island_parity_report):
+    assert "islandized parity ok" in island_parity_report
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("flow", ["cgtrans", "baseline"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+def test_islandized_value_cell(island_parity_report, flow, impl, op):
+    assert (f"island parity path=edges flow={flow} op={op} impl={impl} ok"
+            in island_parity_report)
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("flow", ["cgtrans", "baseline"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("op", ["add", "max"])
+def test_islandized_grad_cell(island_parity_report, flow, impl, op):
+    assert (f"island parity grad flow={flow} op={op} impl={impl} ok"
+            in island_parity_report)
+
+
+@pytest.mark.distributed
+def test_islandized_sage_and_serving_cells(island_parity_report):
+    assert "island sage parity ok" in island_parity_report
+    assert "island serving parity cache=on ok" in island_parity_report
+
+
+@pytest.mark.distributed
+def test_islandized_locality_counted_on_mesh(island_parity_report):
+    """The subprocess case prints the counted reductions; both must be
+    strict on the 8-way mesh."""
+    assert "island locality remote_rows" in island_parity_report
+    assert "island locality dense_rounds" in island_parity_report
