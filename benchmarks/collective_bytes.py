@@ -91,6 +91,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core import cgtrans  # noqa: E402
+from repro.core import sparse as sparsefmt  # noqa: E402
 from repro.graph import partition_by_src, uniform_graph  # noqa: E402
 from repro.launch import hlo_analysis as H  # noqa: E402
 from repro.launch.mesh import make_data_mesh  # noqa: E402
@@ -534,6 +535,109 @@ def check_wire_rows(rows) -> list:
     return failures
 
 
+def bench_sparse(ways: int = 8, B_loc: int = 32, part: int = 64,
+                 K: int = 10, F: int = 512) -> list:
+    """Compressed-sparse features (``repro.core.sparse``): the baseline
+    raw-row shipment lowered per measured density — synthetic tables at
+    density 0.1 / 0.3 / 1.0, capacity MEASURED from each table
+    (``table_capacity``, the entrypoints' own gate input), per-collective
+    bytes split from the compiled HLO plus the analytic SSD→host bytes per
+    gathered row (capacity + bitmap words vs F dense lanes — the codec is
+    deterministic, so the per-row arithmetic IS the claim).
+
+    Density 1.0 is the control: ``table_capacity`` returns F, the
+    ``sparse_fits`` gate fails, and the path must ship the EXACT dense
+    bytes — compression that couldn't win must cost nothing.
+    """
+    mesh = make_data_mesh(ways)
+    rng = np.random.default_rng(0)
+    rows = []
+    nbrs = jnp.zeros((ways, B_loc, K), jnp.int32)
+    mask = jnp.ones((ways, B_loc, K), bool)
+
+    def lower(features, cap):
+        return _collective_detail(
+            lambda f, n, m: cgtrans.aggregate_sampled(
+                f, n, m, mesh=mesh, dataflow="baseline", features=features,
+                sparse_capacity=cap),
+            jnp.zeros((ways, part, F)), nbrs, mask)
+
+    dense_total, dense_colls = lower("dense", None)
+    wpr = sparsefmt.bitmap_words(F)
+    for density in (0.1, 0.3, 1.0):
+        vals = np.round(rng.standard_normal((ways, part, F)) * 5.0)
+        feats = np.where(rng.random(vals.shape) < density,
+                         np.where(vals == 0, 1.0, vals), 0.0)
+        cap = sparsefmt.table_capacity(feats)
+        fits = sparsefmt.sparse_fits(cap, F)
+        total, colls = lower("sparse", cap)
+        ssd_dense = F * 4
+        ssd_sparse = (cap + wpr) * 4 if fits else ssd_dense
+        rows.append({
+            "mode": "sparse", "ways": ways, "K": K, "F": F, "B_loc": B_loc,
+            "part": part, "density": sparsefmt.density_stats(feats)["density"],
+            "target_density": density, "capacity": cap, "fits": fits,
+            "bytes": total, "dense_bytes": dense_total,
+            "all_to_all_bytes": colls["all-to-all"]["bytes"],
+            "dense_all_to_all_bytes": dense_colls["all-to-all"]["bytes"],
+            "all_gather_count": colls["all-gather"]["count"],
+            "all_to_all_count": colls["all-to-all"]["count"],
+            "dense_all_gather_count": dense_colls["all-gather"]["count"],
+            "dense_all_to_all_count": dense_colls["all-to-all"]["count"],
+            "ssd_bytes_per_row": ssd_sparse,
+            "dense_ssd_bytes_per_row": ssd_dense,
+        })
+    return rows
+
+
+#: all_to_all byte-ratio floors the sparse rows must clear vs the dense
+#: shipment: ≈3.5× nominal at density 0.1 (capacity 128 + 16 bitmap words
+#: vs 512 lanes) asserted at 2×; ≈1.9× nominal at 0.3 asserted at 1.5×
+SPARSE_MIN_D01 = 2.0
+SPARSE_MIN_D03 = 1.5
+
+
+def check_sparse_rows(rows) -> list:
+    """The sparse-feature mechanism, asserted deterministically
+    (compiled-HLO bytes + codec arithmetic, never clocks). Returns failure
+    strings (empty = the claims hold).
+
+    * collective COUNTS equal the dense twin's at every density;
+    * density 0.1: all_to_all bytes ≥ 2× smaller AND SSD→host bytes per
+      gathered row ≥ 2× smaller;
+    * density 0.3: both ratios ≥ 1.5×;
+    * density 1.0: the gate falls back — bytes EXACTLY the dense bytes.
+    """
+    failures = []
+    floors = {0.1: SPARSE_MIN_D01, 0.3: SPARSE_MIN_D03}
+    for r in (r for r in rows if r["mode"] == "sparse"):
+        d = r["target_density"]
+        for c in ("all_gather_count", "all_to_all_count"):
+            if r[c] != r[f"dense_{c}"]:
+                failures.append(
+                    f"sparse density={d} changed {c}: {r[f'dense_{c}']:.0f} "
+                    f"→ {r[c]:.0f} (bytes may shrink, counts must not)")
+        if d in floors:
+            a2a = r["dense_all_to_all_bytes"] / r["all_to_all_bytes"]
+            ssd = r["dense_ssd_bytes_per_row"] / r["ssd_bytes_per_row"]
+            if a2a < floors[d]:
+                failures.append(f"sparse density={d}: all_to_all ratio "
+                                f"{a2a:.2f} < {floors[d]}")
+            if ssd < floors[d]:
+                failures.append(f"sparse density={d}: SSD row ratio "
+                                f"{ssd:.2f} < {floors[d]}")
+        else:                    # density 1.0 — the gate-fallback control
+            if r["fits"]:
+                failures.append("sparse density=1.0 capacity cleared the "
+                                "gate — table_capacity is broken")
+            if r["bytes"] != r["dense_bytes"]:
+                failures.append(
+                    f"sparse density=1.0 gate fallback moved "
+                    f"{r['bytes']:.0f}B ≠ dense {r['dense_bytes']:.0f}B — "
+                    f"a losing compression must cost nothing")
+    return failures
+
+
 def bench_serving(ways: int = 8, V: int = 64, F: int = 16,
                   fanout: int = 10) -> list:
     """Online serving, counted the way it is claimed: a queue of N
@@ -836,6 +940,19 @@ def main(argv=None) -> int:
               f"gather={r['all_gather_bytes']:>7.0f}B  "
               f"a2a={r['all_to_all_bytes']:>9.0f}B")
 
+    # compressed-sparse features: the baseline raw-row shipment per
+    # measured density — bytes scale with density, the density-1.0 control
+    # must fall back to the exact dense bytes
+    sparse_rows = bench_sparse(8)
+    for r in sparse_rows:
+        rows.append(r)
+        print(f"sparse/d={r['target_density']:<4} cap={r['capacity']:<4d} "
+              f"{'fit' if r['fits'] else 'dense'} "
+              f"a2a={r['all_to_all_bytes']:>9.0f}B "
+              f"(dense {r['dense_all_to_all_bytes']:>9.0f}B)  "
+              f"ssd/row={r['ssd_bytes_per_row']:>5d}B "
+              f"(dense {r['dense_ssd_bytes_per_row']}B)")
+
     # online serving, counted: N concurrent callers drain as ONE fused
     # command block — finds-per-query 1/N, collectives-per-query 2/N,
     # bit-exact with the per-request baseline; plus the hot-cache replay
@@ -929,6 +1046,13 @@ def main(argv=None) -> int:
             / next(r2["bytes"] for r2 in wire_rows
                    if r2["F"] == 128 and r2["wire"] == w)
             for w in ("bf16", "int8")},
+        # the sparse-feature headline: baseline all_to_all bytes vs the
+        # dense shipment per density (F=512; 1.0 is the gate-fallback
+        # control and must read exactly 1.0)
+        "sparse_a2a_ratios": {
+            str(r2["target_density"]):
+                r2["dense_all_to_all_bytes"] / r2["all_to_all_bytes"]
+            for r2 in sparse_rows},
     }
     # the scheduler mechanism, asserted DETERMINISTICALLY (round counts,
     # not wall times — timing on this topology is an estimator, the counts
@@ -957,6 +1081,9 @@ def main(argv=None) -> int:
     mech_failures += check_serving_rows(serving_rows)
     # and the wire mechanism: byte ratios per format, counts unchanged
     mech_failures += check_wire_rows(wire_rows)
+    # and the sparse-feature mechanism: bytes scale with density, the
+    # density-1.0 gate fallback costs exactly nothing
+    mech_failures += check_sparse_rows(sparse_rows)
 
     out = {"jax_version": jax.__version__, "devices": n_dev,
            "rows": rows, "summary": summary}

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Bench-drift gate: compare a fresh ``collective_bytes.py`` JSON against
+the committed ``BENCH_collective_bytes.json``.
+
+The bench file mixes two kinds of rows. COUNTER/RATIO rows (collective
+bytes out of compiled HLO, dispatch counts, skip-rate round counts,
+capacity gates) are deterministic functions of the code — if a fresh run
+disagrees with the committed file, someone changed the mechanism without
+regenerating the committed claim, and that silent drift is exactly what
+this gate fails on. TIMING rows (``agg_time``/``sched_build``/
+``train_step_time`` modes, and ``us``/``us_per_shard``/``loss`` fields
+anywhere) are interpreter-mode estimators — noisy by design, ignored here.
+
+Rows pair up by identity (mode + the declared parameter fields); every
+remaining non-timing field must match EXACTLY. Rows present on only one
+side are informational, never failures — the bench-smoke lane runs
+``--fast`` (a strict subset of the committed full run), and a missing row
+is a coverage note, not counter drift. Summary keys are compared only for
+the declared deterministic set (the ``--fast``-dependent aggregates like
+``checked``/``max_ratio`` legitimately differ between lanes).
+
+Usage:  check_bench_drift.py FRESH.json COMMITTED.json
+Exit 0 = no drift; exit 1 = drift (a markdown table of every mismatch is
+printed — pipe it into the CI step summary).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+#: row modes that are wall-clock measurements — skipped wholesale
+TIMING_MODES = {"agg_time", "sched_build", "train_step_time"}
+
+#: wall-clock fields that may appear on otherwise-counted rows — ignored
+TIMING_FIELDS = {"us", "us_per_shard", "loss"}
+
+#: fields that IDENTIFY a row (the bench sweep parameters); everything
+#: else on the row is a measured claim and must match exactly
+ID_FIELDS = {
+    "mode", "ways", "K", "F", "V", "E", "B_loc", "part", "N", "waves",
+    "fanout", "wire", "flow", "form", "impl", "scheduled", "graph",
+    "method", "target_density", "paper_figure",
+}
+
+#: summary keys that are deterministic (counted, never clocked) and
+#: independent of the --fast subset — compared exactly
+DETERMINISTIC_SUMMARY = (
+    "paper_figure_ratio", "clustered_skipped_rounds",
+    "coalesce_collectives_separate", "coalesce_collectives_coalesced",
+    "partition_remote_rows", "partition_dense_live_rounds",
+    "serving_finds_per_query", "serving_collectives_per_query",
+    "serving_cache_hit_rate", "wire_ratios_K50_F128", "sparse_a2a_ratios",
+)
+
+
+def row_key(row: dict):
+    return tuple(sorted((k, row[k]) for k in row if k in ID_FIELDS))
+
+
+def fmt_key(key) -> str:
+    return " ".join(f"{k}={v}" for k, v in key)
+
+
+def compare(fresh: dict, committed: dict):
+    """Returns (drift, notes): drift rows are failures, notes informational.
+    Each drift entry is (where, field, committed value, fresh value)."""
+    drift, notes = [], []
+
+    if fresh.get("jax_version") != committed.get("jax_version"):
+        notes.append(f"jax version differs: committed "
+                     f"{committed.get('jax_version')}, fresh "
+                     f"{fresh.get('jax_version')} — regenerate the "
+                     f"committed file if counters moved with it")
+
+    f_rows = {row_key(r): r for r in fresh.get("rows", [])
+              if r.get("mode") not in TIMING_MODES}
+    c_rows = {row_key(r): r for r in committed.get("rows", [])
+              if r.get("mode") not in TIMING_MODES}
+    only_f = sorted(set(f_rows) - set(c_rows))
+    only_c = sorted(set(c_rows) - set(f_rows))
+    for k in only_f:
+        notes.append(f"row only in fresh run (coverage note): {fmt_key(k)}")
+    for k in only_c:
+        notes.append(f"row only in committed file (the --fast lane skips "
+                     f"it): {fmt_key(k)}")
+
+    for k in sorted(set(f_rows) & set(c_rows)):
+        fr, cr = f_rows[k], c_rows[k]
+        fields = (set(fr) | set(cr)) - ID_FIELDS - TIMING_FIELDS
+        for field in sorted(fields):
+            fv, cv = fr.get(field), cr.get(field)
+            if fv != cv:
+                drift.append((fmt_key(k), field, cv, fv))
+
+    fs = fresh.get("summary", {})
+    cs = committed.get("summary", {})
+    for key in DETERMINISTIC_SUMMARY:
+        if key in fs and key in cs and fs[key] != cs[key]:
+            drift.append(("summary", key, cs[key], fs[key]))
+
+    return drift, notes
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        fresh = json.load(f)
+    with open(argv[1]) as f:
+        committed = json.load(f)
+
+    drift, notes = compare(fresh, committed)
+
+    print("## Bench drift check")
+    print(f"fresh `{argv[0]}` vs committed `{argv[1]}`\n")
+    if notes:
+        for n in notes:
+            print(f"- note: {n}")
+        print()
+    if not drift:
+        print("**No drift**: every shared counter/ratio row matches the "
+              "committed file exactly (timing rows ignored).")
+        return 0
+    print(f"**DRIFT**: {len(drift)} counter field(s) disagree with the "
+          f"committed claims — regenerate `BENCH_collective_bytes.json` "
+          f"with a full (non-`--fast`) run if the change is intentional.\n")
+    print("| row | field | committed | fresh |")
+    print("|---|---|---|---|")
+    for where, field, cv, fv in drift:
+        print(f"| {where} | {field} | {cv} | {fv} |")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

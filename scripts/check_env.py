@@ -210,6 +210,38 @@ def main(argv=None) -> int:
             f"the compressed-wire codecs do not round-trip on this JAX — "
             f"the wire tier (ci.sh --tier wire) cannot run: {e!r}")
 
+    # -- sparse feature codec (the compressed-sparse tier) -----------------
+    # the sparse tier (tests/test_sparse.py, ci.sh --tier sparse) ships
+    # bitmap+packed feature rows through the gather and the baseline
+    # all_to_all; probe the pure codec HERE (cumsum-positional decode plus
+    # the static capacity gate) so a broken round-trip fails with one
+    # message instead of a parity-matrix explosion
+    try:
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.core import sparse
+
+        x = jnp.array([[0.0, 2.0, 0.0, 0.0, 5.0, 0.0, 0.0, 1.0],
+                       [0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]],
+                      jnp.float32)
+        cap = sparse.table_capacity(np.asarray(x))
+        packed, bitmap = sparse.encode_rows(x, cap)
+        dec = sparse.decode_rows(packed, bitmap, x.shape[1])
+        assert bool((dec == x).all()), dec              # round-trip is exact
+        pc = np.asarray(sparse.popcount(bitmap))
+        assert (pc == [3, 0]).all(), pc                 # bitmap ≡ packed len
+        assert sparse.sparse_fits(cap, 64)              # small cap wins at F=64
+        assert not sparse.sparse_fits(8, 8)             # dense table: gate off
+        rows.append(("sparse codec",
+                     "functional (bitmap+packed round-trip exact, capacity "
+                     "gate static)"))
+    except Exception as e:  # noqa: BLE001 — report, don't crash the report
+        rows.append(("sparse codec", "BROKEN"))
+        failures.append(
+            f"the compressed-sparse feature codec does not round-trip on "
+            f"this JAX — the sparse tier (ci.sh --tier sparse) cannot "
+            f"run: {e!r}")
+
     # -- islandized locality partitioner (the partitioning tier) -----------
     # the part tier (tests/test_partition.py, ci.sh --tier part) rests on
     # islandize emitting a true permutation whose packing beats the interval

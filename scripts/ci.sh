@@ -35,6 +35,13 @@
 #                                        # generator contracts + the
 #                                        # islandized ≡ interval parity
 #                                        # matrix (host and 8-way mesh)
+#   scripts/ci.sh --tier sparse          # the compressed-sparse feature
+#                                        # tier: bitmap+packed codec
+#                                        # properties, the capacity gate,
+#                                        # feature-block skip bit-exactness,
+#                                        # the bench-drift gate, and the
+#                                        # sparse ≡ dense on-mesh parity
+#                                        # matrix (values AND grads)
 #   scripts/ci.sh --list-tiers           # machine-readable lane list (one
 #                                        # per line) — .github/workflows/
 #                                        # ci.yml builds its job matrix
@@ -47,7 +54,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # every lane the workflow matrix runs; `full` is tier-1 (the workflow passes
 # it `-m "not distributed"` — the subprocess cases already run one-per-lane)
-TIERS=(pallas grad sched coalesce serve lint wire part full)
+TIERS=(pallas grad sched coalesce serve lint wire part sparse full)
 
 TIER="full"
 # seeded with the always-on flags so the array is never empty: the classic
@@ -142,6 +149,17 @@ case "$TIER" in
     # on), and the 8-way subprocess matrix — the subprocess sets its own
     # XLA_FLAGS, so no topology forcing is needed here.
     python -m pytest "${ARGS[@]}" tests/test_partition.py
+    ;;
+  sparse)
+    # the compressed-sparse feature tier: the bitmap+packed codec property
+    # suite (round-trips at random densities incl. all-zero rows and
+    # density 1.0, popcount ≡ packed length, the static capacity gate),
+    # the feature-block skip dispatch bit-exactness, the bench-drift gate
+    # against the committed counter JSON, and the sparse ≡ dense parity
+    # matrix (values AND grads across dataflow × impl × op) — the on-mesh
+    # matrix runs once in an 8-device subprocess that sets its own
+    # XLA_FLAGS, so no topology forcing is needed here.
+    python -m pytest "${ARGS[@]}" tests/test_sparse.py tests/test_bench_drift.py
     ;;
   *)
     echo "unknown --tier '$TIER' (expected one of: ${TIERS[*]})" >&2

@@ -228,7 +228,13 @@ def _fetch_blocks():
     return feats, b1, b2
 
 
-def _build_sampled(flow: str, impl: str, scheduled: bool, wire: str = "f32"):
+#: static packed width of the sparse contract fixtures: 16 + 2 bitmap words
+#: < _F=64, so the ``sparse_fits`` gate passes and the sparse path traces
+_SPARSE_CAP = 16
+
+
+def _build_sampled(flow: str, impl: str, scheduled: bool, wire: str = "f32",
+                   features: str = "dense"):
     def build():
         from repro.core import cgtrans
         from repro.launch.mesh import make_data_mesh
@@ -238,12 +244,14 @@ def _build_sampled(flow: str, impl: str, scheduled: bool, wire: str = "f32"):
         def fn(f, nb, mk):
             return cgtrans.aggregate_sampled(
                 f, nb, mk, mesh=mesh, dataflow=flow, impl=impl,
-                scheduled=scheduled, wire=wire)
+                scheduled=scheduled, wire=wire, features=features,
+                sparse_capacity=_SPARSE_CAP if features == "sparse" else None)
         return fn, (feats, nb2, mk2)
     return build
 
 
-def _build_multi(flow: str, impl: str, scheduled: bool, wire: str = "f32"):
+def _build_multi(flow: str, impl: str, scheduled: bool, wire: str = "f32",
+                 features: str = "dense"):
     def build():
         from repro.core import cgtrans
         from repro.launch.mesh import make_data_mesh
@@ -253,7 +261,8 @@ def _build_multi(flow: str, impl: str, scheduled: bool, wire: str = "f32"):
         def fn(f, blocks):
             return cgtrans.aggregate_multi(
                 f, blocks, mesh=mesh, dataflow=flow, impl=impl,
-                scheduled=scheduled, wire=wire)
+                scheduled=scheduled, wire=wire, features=features,
+                sparse_capacity=_SPARSE_CAP if features == "sparse" else None)
         return fn, (feats, (b1, b2))
     return build
 
@@ -409,7 +418,8 @@ def _build_embed(cgtrans: bool, impl: str):
     return build
 
 
-def _build_edges(flow: str, impl: str, op: str, wire: str = "f32"):
+def _build_edges(flow: str, impl: str, op: str, wire: str = "f32",
+                 features: str = "dense"):
     def build():
         import jax.numpy as jnp
         from repro.core import cgtrans
@@ -421,9 +431,10 @@ def _build_edges(flow: str, impl: str, op: str, wire: str = "f32"):
                 _sds((_WAYS, E), jnp.float32), _sds((_WAYS, E), jnp.bool_))
 
         def fn(f, src, dst, w, m):
-            return cgtrans.aggregate_edges(f, src, dst, w, m, mesh=mesh,
-                                           dataflow=flow, impl=impl, op=op,
-                                           wire=wire)
+            return cgtrans.aggregate_edges(
+                f, src, dst, w, m, mesh=mesh, dataflow=flow, impl=impl,
+                op=op, wire=wire, features=features,
+                sparse_capacity=_SPARSE_CAP if features == "sparse" else None)
         return fn, args
     return build
 
@@ -717,6 +728,66 @@ _register(DataflowContract(
     note=f"the serving drain on the bf16 wire (ServingEngine(wire=)): "
          f"N={SERVE_CONTRACT_N} fused callers, collective pair still "
          f"N-independent, bytes halved"))
+
+# -- compressed-sparse feature variants (repro.core.sparse) ------------------
+# like the narrow wire, the format changes BYTES, never budgets: the sparse
+# gather is two takes instead of one (both inside the SAME ticked find) and
+# the baseline raw-row shipment packs (nonzeros ‖ bitmap) through the SAME
+# one all_to_all — so every sparse variant's collective and dispatch counts
+# equal its dense twin's, forward AND backward (the sparse-gather VJP
+# scatters the dense cotangent with the identical reduce/kernel_scatter
+# pattern, and _sparse_all_to_all's VJP ships the dense cotangent over one
+# all_to_all exactly like the dense transpose).
+_SPARSE_NOTE = ("compressed-sparse features by design (repro.core.sparse): "
+                "packed nonzeros + int32 occupancy bitmap on the {leg}, "
+                "static capacity {cap} of F={f} — same budget as the dense "
+                "twin")
+_register(DataflowContract(
+    name="aggregate_sampled/cgtrans/xla/sparse",
+    build=_build_sampled("cgtrans", "xla", False, features="sparse"),
+    forward=_SAMPLED_FWD["cgtrans"],
+    fwd_bwd=_SAMPLED_BWD["cgtrans"],
+    note=_SPARSE_NOTE.format(leg="table gather", cap=_SPARSE_CAP, f=_F)))
+_register(DataflowContract(
+    name="aggregate_sampled/cgtrans/pallas/sparse",
+    build=_build_sampled("cgtrans", "pallas", False, features="sparse"),
+    forward=_merge(_SAMPLED_FWD["cgtrans"], {"kernel_scatter": 1}),
+    fwd_bwd=_SAMPLED_BWD_PALLAS["cgtrans"],
+    note=_SPARSE_NOTE.format(leg="table gather", cap=_SPARSE_CAP, f=_F)
+         + "; the sparse-gather VJP scatters through the FAST-GAS kernel "
+           "like the dense pallas gather"))
+_register(DataflowContract(
+    name="aggregate_sampled/baseline/xla/sparse",
+    build=_build_sampled("baseline", "xla", False, features="sparse"),
+    forward=_SAMPLED_FWD["baseline"],
+    fwd_bwd=_SAMPLED_BWD["baseline"],
+    note=_SPARSE_NOTE.format(leg="table gather AND the raw-row all_to_all",
+                             cap=_SPARSE_CAP, f=_F)))
+_register(DataflowContract(
+    name="aggregate_multi/cgtrans/xla/sparse",
+    build=_build_multi("cgtrans", "xla", False, features="sparse"),
+    forward=_MULTI_FWD["cgtrans"],
+    fwd_bwd=_MULTI_BWD["cgtrans"],
+    note=_SPARSE_NOTE.format(leg="combined table gather", cap=_SPARSE_CAP,
+                             f=_F)))
+_register(DataflowContract(
+    name="aggregate_edges/cgtrans/add/xla/sparse",
+    build=_build_edges("cgtrans", "xla", "add", features="sparse"),
+    forward=_EDGES_FWD[("cgtrans", "add")],
+    note=_SPARSE_NOTE.format(leg="edge-source gather", cap=_SPARSE_CAP, f=_F)
+         + "; partials have UNION support so the psum_scatter shipment "
+           "stays dense — unlike the narrow wire, add keeps its budget"))
+_register(DataflowContract(
+    name="aggregate_sampled/baseline/xla/sparse-bf16",
+    build=_build_sampled("baseline", "xla", False, wire="bf16",
+                         features="sparse"),
+    forward=_SAMPLED_FWD["baseline"],
+    fwd_bwd=_SAMPLED_BWD["baseline"],
+    dtype_waivers=("narrow-wire",),
+    note="the composition the formats were built for: baseline + narrow "
+         "wire is ONLY legal with sparse features (packed nonzeros "
+         "quantize like partials — bf16 codes + bitcast bitmap lanes on "
+         "the raw-row all_to_all), still the dense twin's budget"))
 
 
 #: every (entrypoint, dataflow-or-form, impl) the meta-test asserts coverage

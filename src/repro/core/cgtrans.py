@@ -90,11 +90,13 @@ from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import psum_scatter, shard_map
 from repro.core import gas
+from repro.core import sparse as sparsefmt
 from repro.core import wire as wirefmt
 
 AXIS = "data"  # the storage-tier axis
@@ -146,16 +148,154 @@ def _wire_a2a_bwd(wire, identity, n_exact, _res, g):
 _wire_all_to_all.defvjp(_wire_a2a_fwd, _wire_a2a_bwd)
 
 
-def _check_wire(wire: str, dataflow: str) -> str:
+def _check_wire(wire: str, dataflow: str, features: str = "dense") -> str:
     """Validate a ``wire=`` knob at trace time. The baseline dataflow is the
     ship-raw strawman — compressing its wire would un-define the comparison
-    the byte benches make — so only cgtrans accepts a narrow wire."""
+    the byte benches make — so only cgtrans accepts a narrow wire. With
+    ``features="sparse"`` the baseline's shipment is the PACKED row block,
+    which quantizes exactly like a cgtrans partial block does, so the narrow
+    wire becomes legal there too (sparse nonzeros ship bf16/int8 + bitmap)."""
     wirefmt.validate(wire)
-    if wire != "f32" and dataflow == "baseline":
+    if wire != "f32" and dataflow == "baseline" and features != "sparse":
         raise ValueError(
             "wire compression is a cgtrans-dataflow mechanism; the baseline "
-            "strawman ships raw f32 by definition")
+            "strawman ships raw f32 by definition (features='sparse' is the "
+            "exception: packed nonzeros quantize like partials)")
     return wire
+
+
+# ---------------------------------------------------------------------------
+# compressed-sparse features (repro.core.sparse): the codec is pure; the
+# find that consumes the packed table and the ONE all_to_all that ships a
+# packed row block both live HERE, inside the contract-covered module, so
+# the collective-site allowlist and the dispatch-tick coverage never grow.
+# ---------------------------------------------------------------------------
+
+def _resolve_sparse(features: str, sparse_capacity: Optional[int],
+                    n_features: int) -> Optional[int]:
+    """``features=`` knob → the packed capacity to run with, or None for
+    the dense path. ``features="sparse"`` requires an explicit capacity
+    (``sparse.table_capacity(feats)`` — a static host-side measurement, the
+    one thing trace-time code cannot derive); a capacity that fails the
+    static ``sparse_fits`` gate falls back to dense UNCHANGED — the
+    fallback ships exactly the pre-sparse bytes, never a truncated row."""
+    if sparsefmt.validate_features(features) == "dense":
+        if sparse_capacity is not None:
+            raise ValueError(
+                "sparse_capacity= only applies with features='sparse'")
+        return None
+    if sparse_capacity is None:
+        raise ValueError(
+            "features='sparse' needs sparse_capacity= — measure it once "
+            "with sparse.table_capacity(feats) (a static host-side int)")
+    cap = int(sparse_capacity)
+    if cap < 1:
+        raise ValueError(f"sparse_capacity must be ≥ 1, got {cap}")
+    return cap if sparsefmt.sparse_fits(cap, n_features) else None
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_gather(n_rows: int, capacity: int, impl: str):
+    """Row gather from the PACKED table — the SSD→host read that scales
+    with density: two ``take``s (packed nonzeros in the table dtype + the
+    int32 bitmap) move ``capacity + ceil(F/32)`` lanes per row instead of
+    F. The decode is positional and the capacity gate is static, so the
+    result is bit-exact with the dense gather — which is why ONE custom_vjp
+    covers both backends: the backward is the same scatter-add of the
+    cotangent rows the dense gather uses (``_gather_pallas`` under pallas —
+    the FAST-GAS kernel; a segment-sum under xla, matching the take
+    transpose), never a differentiation of the codec's cumsum."""
+
+    @jax.custom_vjp
+    def gather(table, ids):
+        packed, bitmap = sparsefmt.encode_rows(table, capacity)
+        rows = sparsefmt.decode_rows(
+            jnp.take(packed, ids, axis=0), jnp.take(bitmap, ids, axis=0),
+            table.shape[-1])
+        return rows.astype(table.dtype)
+
+    def fwd(table, ids):
+        # the zero-size residual carries the table dtype into the bwd cast
+        return gather(table, ids), (ids, jnp.zeros((0,), table.dtype))
+
+    def bwd(res, g):
+        ids, like = res
+        gf = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+        if impl == "pallas":
+            dtab = gas._scatter_weighted_impl(ids.reshape(-1), gf, None,
+                                              None, n_rows, "add", "pallas")
+        else:
+            dtab = jax.ops.segment_sum(gf, ids.reshape(-1),
+                                       num_segments=n_rows)
+        return dtab.astype(like.dtype), np.zeros(np.shape(ids),
+                                                 jax.dtypes.float0)
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def _find(table, ids, *, impl: str, sparse_cap: Optional[int] = None):
+    """The find of find-and-compute, density-aware: dense tables route
+    through ``gas.gas_gather`` unchanged; a packed capacity swaps in the
+    compressed-table gather. Ticks ``find`` exactly once either way, so
+    every dispatch budget is features-invariant."""
+    if sparse_cap is None:
+        return gas.gas_gather(table, ids, impl=impl)
+    gas._tick("find")
+    return _sparse_gather(table.shape[0], sparse_cap, impl)(table, ids)
+
+
+def _sparse_ship(x, wire: str, capacity: int):
+    """Pack a raw (n, N, F) row block, ship (packed ‖ bitmap) through ONE
+    ``all_to_all``, decode on arrival (f32 math under a narrow wire). The
+    bitmap always travels as exact bitcast lanes — int16×2 / int8×4 per
+    word — so only the nonzero VALUES ever quantize."""
+    F = x.shape[-1]
+    W = sparsefmt.bitmap_words(F)
+    packed, bitmap = sparsefmt.encode_rows(x, capacity)
+    if wire == "f32":
+        payload = jnp.concatenate(
+            [packed, lax.bitcast_convert_type(bitmap, x.dtype)], axis=-1)
+        parts = lax.all_to_all(payload, AXIS, split_axis=0, concat_axis=0,
+                               tiled=False)
+        pk = parts[..., :capacity]
+        bm = lax.bitcast_convert_type(parts[..., capacity:], jnp.int32)
+        return sparsefmt.decode_rows(pk, bm, F)
+    enc = wirefmt.encode_payload(packed.astype(jnp.float32), wire)
+    bits16 = lax.bitcast_convert_type(
+        bitmap, enc.dtype).reshape(*bitmap.shape[:-1], -1)
+    nb = bits16.shape[-1]
+    parts = lax.all_to_all(jnp.concatenate([enc, bits16], axis=-1), AXIS,
+                           split_axis=0, concat_axis=0, tiled=False)
+    pk = wirefmt.decode_payload(parts[..., :parts.shape[-1] - nb], wire)
+    bm = lax.bitcast_convert_type(
+        parts[..., parts.shape[-1] - nb:].reshape(
+            *parts.shape[:-1], W, nb // W), jnp.int32)
+    return sparsefmt.decode_rows(pk, bm, F).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _sparse_all_to_all(x, wire: str, capacity: int):
+    """The baseline dataflow's raw-row shipment on sparse features: bytes
+    on the wire are ``capacity + ceil(F/32)`` lanes per row instead of F —
+    the all_to_all bytes scale with density. A ``custom_vjp`` so the
+    codec's cumsum/scatter never meets autodiff; the backward ships the
+    DENSE cotangent through the plain wired collective (cotangent support
+    is not statically knowable — rows that were zero forward can carry
+    nonzero cotangents — so compressing it would need a runtime capacity;
+    exactness over economy on the reverse path)."""
+    return _sparse_ship(x, wire, capacity)
+
+
+def _sparse_a2a_fwd(x, wire, capacity):
+    return _sparse_ship(x, wire, capacity), None
+
+
+def _sparse_a2a_bwd(wire, capacity, _res, g):
+    return (_wired_a2a(g, wire, 0.0, 0),)
+
+
+_sparse_all_to_all.defvjp(_sparse_a2a_fwd, _sparse_a2a_bwd)
 
 
 def _check_vma(impl: str) -> Optional[bool]:
@@ -223,7 +363,7 @@ def apply_edge_schedule(schedule, *edge_arrays):
 # ---------------------------------------------------------------------------
 
 def _agg_local(feats, src_local, dst_global, w, mask, n_vertices, op, impl,
-               schedule=None):
+               schedule=None, sparse_cap=None):
     """In-SSD step: local gather + segment-reduce into global dst bins.
 
     ``impl`` threads into BOTH halves: under pallas the scatter's VJP is the
@@ -231,9 +371,13 @@ def _agg_local(feats, src_local, dst_global, w, mask, n_vertices, op, impl,
     through the kernel too — the backward stays in the in-SSD regime.
     ``schedule``: banded idle-skip bounds for edge arrays that are already
     in schedule order (the caller permutes the edge list, so the gather
-    emits the value stream binned).
+    emits the value stream binned). ``sparse_cap`` swaps the gather for the
+    compressed-table read (``repro.core.sparse``) — the SSD→host bytes
+    scale with density; the reduction itself stays dense (aggregated
+    partials have union support).
     """
-    gathered = gas.gas_gather(feats, src_local, impl=impl)  # LOCAL by construction
+    gathered = _find(feats, src_local, impl=impl,
+                     sparse_cap=sparse_cap)       # LOCAL by construction
     return gas.gas_scatter_weighted(
         dst_global, gathered, w, mask, n_vertices, op=op, impl=impl,
         schedule=schedule)
@@ -254,6 +398,8 @@ def aggregate_edges(
     schedule=None,                      # precomputed build_edge_schedule(...)
     schedule_applied: bool = False,     # edge arrays already in perm order
     wire: str = "f32",                  # f32 | bf16 | int8 (cgtrans only)
+    features: str = "dense",            # dense | sparse (repro.core.sparse)
+    sparse_capacity: Optional[int] = None,
 ) -> jax.Array:
     """Returns (P, part, F) aggregated destination features, owner-sharded.
 
@@ -268,9 +414,15 @@ def aggregate_edges(
     ignored). ``wire`` selects the transport format of the compressed
     transmission (``repro.core.wire``); the single-shard reference path has
     no interconnect, so there it is validated and otherwise a no-op.
+    ``features="sparse"`` (with ``sparse_capacity=`` from
+    ``sparse.table_capacity``) reads the feature table through the packed
+    compressed-sparse layout — the in-SSD gather bytes scale with density;
+    the partial shipments stay dense (union support) and every result is
+    bit-exact with the dense path.
     """
-    _check_wire(wire, dataflow)
+    _check_wire(wire, dataflow, features)
     Pn, part, F = feats.shape
+    sparse_cap = _resolve_sparse(features, sparse_capacity, F)
     V = Pn * part
     use_sched = _resolve_scheduled(scheduled, impl) or schedule is not None
     if schedule_applied:
@@ -290,7 +442,7 @@ def aggregate_edges(
                      else gas.schedule_edges(d, m, V))
             s, d, w, m = _permuted(sched, s, d, w, m)
         out = _agg_local(feats.reshape(V, F), s, d, w, m, V, op, impl,
-                         schedule=sched)
+                         schedule=sched, sparse_cap=sparse_cap)
         return out.reshape(Pn, part, F)
 
     n = mesh.shape[AXIS]
@@ -309,7 +461,7 @@ def aggregate_edges(
                 if not schedule_applied:
                     s, d, w, m = _permuted(sched, s, d, w, m)
             partial = _agg_local(f[0], s, d, w, m, V, op, impl,
-                                 schedule=sched)
+                                 schedule=sched, sparse_cap=sparse_cap)
             # compressed transmission: reduce-scatter the (V, F) partials so
             # each shard receives exactly its owned interval, aggregated.
             if op == "add" and wire == "f32":
@@ -355,7 +507,7 @@ def aggregate_edges(
             # Weights scale contributions only under op="add" — max/min take
             # the raw feature and or ignores weights entirely (matching
             # gas_scatter_weighted, so baseline ≡ cgtrans ≡ reference).
-            raw = gas.gas_gather(f[0], s[0], impl=impl)
+            raw = _find(f[0], s[0], impl=impl, sparse_cap=sparse_cap)
             if op == "add":
                 raw = raw * w[0][:, None].astype(raw.dtype)
             raw = jnp.where(m[0][:, None], raw, 0)
@@ -598,7 +750,8 @@ def _encode_requests(blocks):
     return flat[0] if len(flat) == 1 else jnp.concatenate(flat, axis=1)
 
 
-def _multi_find(table, seg_ids, op: gas.Op, impl: str, use_sched: bool):
+def _multi_find(table, seg_ids, op: gas.Op, impl: str, use_sched: bool,
+                sparse_cap: Optional[int] = None):
     """The in-SSD step of a coalesced command block: ONE combined gather
     over every segment's encoded ids, then the per-segment seed reductions.
 
@@ -607,12 +760,15 @@ def _multi_find(table, seg_ids, op: gas.Op, impl: str, use_sched: bool):
     ``gas_gather`` is issued regardless of segment count — under pallas its
     custom VJP therefore scatter-adds the whole block's cotangent through
     the kernel in ONE backward dispatch, split per segment by the same
-    static offsets. Returns a list of (red_i (R_i, F), cnt_i (R_i,))."""
+    static offsets. ``sparse_cap`` swaps the gather for the packed
+    compressed-table read (one find either way). Returns a list of
+    (red_i (R_i, F), cnt_i (R_i,))."""
     V, F = table.shape
     flat = (seg_ids[0].reshape(-1) if len(seg_ids) == 1 else
             jnp.concatenate([s.reshape(-1) for s in seg_ids]))
     own = (flat >= 0) & (flat < V)
-    rows = gas.gas_gather(table, jnp.clip(flat, 0, V - 1), impl=impl)
+    rows = _find(table, jnp.clip(flat, 0, V - 1), impl=impl,
+                 sparse_cap=sparse_cap)
     outs, off = [], 0
     for s in seg_ids:
         R, K = s.shape
@@ -634,6 +790,8 @@ def aggregate_multi(
     request_chunk: Optional[int] = None,
     scheduled: Optional[bool] = None,   # None → on for impl="pallas"
     wire: str = "f32",                  # f32 | bf16 | int8 (cgtrans only)
+    features: str = "dense",            # dense | sparse (repro.core.sparse)
+    sparse_capacity: Optional[int] = None,
 ):
     """Coalesced request blocks: aggregate SEVERAL sampled request segments
     in ONE SSD command block. Returns a tuple of (P, R_i, F), one per
@@ -680,12 +838,24 @@ def aggregate_multi(
     same wire. ``wire="f32"`` traces byte-identically to the pre-wire code;
     the unsharded reference path has no interconnect, so wire is a no-op
     there (validated, then ignored).
+
+    ``features="sparse"`` (capacity from ``sparse.table_capacity``) reads
+    the local table through the packed compressed-sparse layout on BOTH
+    dataflows (the SSD→host gather bytes scale with density), and on the
+    baseline dataflow additionally ships the raw row block as
+    (packed nonzeros ‖ occupancy bitmap) through the same single
+    ``all_to_all`` — composing with a narrow wire, the nonzeros quantize
+    while the bitmap rides exact. cgtrans partial shipments stay dense
+    (aggregated rows have union support). Bit-exact with dense, values and
+    gradients, under the static capacity gate; a capacity that fails
+    ``sparse.sparse_fits`` falls back to the unchanged dense path.
     """
     if dataflow not in ("cgtrans", "baseline"):
         raise ValueError(dataflow)
-    _check_wire(wire, dataflow)
+    _check_wire(wire, dataflow, features)
     blocks = tuple(blocks)
     Pn, part, F = feats.shape
+    sparse_cap = _resolve_sparse(features, sparse_capacity, F)
     desc = segment_descriptor([nb.shape[-2:] for nb, _ in blocks])
     use_sched = _resolve_scheduled(scheduled, impl)
     enc = _encode_requests(blocks)                       # (P, N_tot)
@@ -702,11 +872,11 @@ def aggregate_multi(
         if request_chunk is None:
             outs = [_finalize(red, cnt, op)
                     for red, cnt in _multi_find(table, seg_enc, op, impl,
-                                                use_sched)]
+                                                use_sched, sparse_cap)]
         else:
             def one(nb_c, m_c):
                 red, cnt = _multi_find(table, [jnp.where(m_c, nb_c, -1)],
-                                       op, impl, use_sched)[0]
+                                       op, impl, use_sched, sparse_cap)[0]
                 return _finalize(red, cnt, op)
 
             outs = [scan_request_chunks(one, e, e >= 0, request_chunk)
@@ -746,7 +916,8 @@ def aggregate_multi(
                 seg_rel = [rel[:, offs[i]:offs[i + 1]].reshape(n * r, k)
                            for i, (r, k) in enumerate(shapes)]
                 # in-SSD aggregation: ONE gather, per-segment reductions
-                found = _multi_find(f, seg_rel, op, impl, use_sched)
+                found = _multi_find(f, seg_rel, op, impl, use_sched,
+                                    sparse_cap)
                 reds = [red.reshape(n, r, F)
                         for (red, _), (r, k) in zip(found, shapes)]
                 payload = reds[0] if len(reds) == 1 else jnp.concatenate(
@@ -784,11 +955,19 @@ def aggregate_multi(
             # ownership bits to the seed owners, reduce there ("the
             # accelerator") — also through the GAS engine.
             own = (rel >= 0) & (rel < part)
-            rows = gas.gas_gather(f, jnp.clip(rel, 0, part - 1).reshape(-1),
-                                  impl=impl).reshape(n, -1, F)
+            rows = _find(f, jnp.clip(rel, 0, part - 1).reshape(-1),
+                         impl=impl, sparse_cap=sparse_cap).reshape(n, -1, F)
             rows = jnp.where(own[..., None], rows, 0)
-            raw = lax.all_to_all(rows, AXIS, split_axis=0, concat_axis=0,
-                                 tiled=False)            # (n, N, F)
+            if sparse_cap is not None and rows.dtype.itemsize == 4:
+                # the raw shipment, packed: non-owned rows were just zeroed
+                # (popcount 0) and owned rows fit the table's capacity gate,
+                # so the SAME static capacity covers every shipped row
+                raw = _sparse_all_to_all(rows, wire, sparse_cap)
+            else:
+                # sub-32-bit tables (bf16 serving) keep the dense ship: an
+                # int32 bitmap has no 16-bit bitcast lane to ride in
+                raw = lax.all_to_all(rows, AXIS, split_axis=0,
+                                     concat_axis=0, tiled=False)  # (n, N, F)
             okk = lax.all_to_all(own[..., None], AXIS, split_axis=0,
                                  concat_axis=0, tiled=False)[..., 0]
             outs, off = [], 0
@@ -838,6 +1017,8 @@ def aggregate_sampled(
     request_chunk: Optional[int] = None,
     scheduled: Optional[bool] = None,   # None → on for impl="pallas"
     wire: str = "f32",                  # f32 | bf16 | int8 (cgtrans only)
+    features: str = "dense",            # dense | sparse (repro.core.sparse)
+    sparse_capacity: Optional[int] = None,
 ) -> jax.Array:
     """Returns (P, B_loc, F) aggregated neighbor features per seed.
 
@@ -861,5 +1042,6 @@ def aggregate_sampled(
     out, = aggregate_multi(feats, ((nbrs, mask),), mesh=mesh,
                            dataflow=dataflow, op=op, impl=impl,
                            request_chunk=request_chunk, scheduled=scheduled,
-                           wire=wire)
+                           wire=wire, features=features,
+                           sparse_capacity=sparse_capacity)
     return out

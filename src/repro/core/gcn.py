@@ -52,6 +52,18 @@ class GCNConfig:
                                          # delta-encoded id streams, f32
                                          # accumulation always (cgtrans
                                          # dataflow only)
+    features: str = "dense"              # feature transport format
+                                         # (repro.core.sparse): dense |
+                                         # sparse — compressed-sparse rows
+                                         # (occupancy bitmap + packed
+                                         # nonzeros) on the table gather
+                                         # and the baseline raw-row
+                                         # shipment; requires
+                                         # sparse_capacity
+    sparse_capacity: Optional[int] = None  # static packed width for
+                                         # features="sparse" — measure it
+                                         # once per table with
+                                         # sparse.table_capacity(feats)
     partition: str = "interval"          # host-side vertex layout
                                          # (repro.graph.partition): interval
                                          # = contiguous-id split | island =
@@ -140,7 +152,12 @@ def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
             h, src_local, dst_global, weights, mask,
             mesh=mesh, dataflow=cfg.dataflow, op=cfg.aggregate,
             impl=impl_r, scheduled=use_sched, schedule=sched,
-            schedule_applied=applied, wire=cfg.wire)
+            schedule_applied=applied, wire=cfg.wire,
+            # sparse only where the gather reads the RAW table: layer-0
+            # rows are post-ReLU-style sparse inputs, deeper layers' h are
+            # dense activations whose measured capacity would be F anyway
+            features=cfg.features if i == 0 else "dense",
+            sparse_capacity=cfg.sparse_capacity if i == 0 else None)
         if cfg.aggregate in ("max", "min"):
             # vertices with no in-edges hold the ±inf identity; mask before
             # the combine so neither the forward nor the cotangent meets inf
@@ -167,14 +184,17 @@ def gcn_forward_full(params, feats, src_local, dst_global, weights, mask,
 # ---------------------------------------------------------------------------
 
 def lookup_rows(feats, ids, *, mesh=None, dataflow="cgtrans", impl="xla",
-                request_chunk=None, scheduled=None, wire="f32"):
+                request_chunk=None, scheduled=None, wire="f32",
+                features="dense", sparse_capacity=None):
     """Distributed row lookup: ids (P, B_loc) → (P, B_loc, F)."""
     nbrs = ids[..., None]
     mask = jnp.ones_like(nbrs, dtype=bool)
     return cgtrans.aggregate_sampled(feats, nbrs, mask, mesh=mesh,
                                      dataflow=dataflow, impl=impl,
                                      request_chunk=request_chunk,
-                                     scheduled=scheduled, wire=wire)
+                                     scheduled=scheduled, wire=wire,
+                                     features=features,
+                                     sparse_capacity=sparse_capacity)
 
 
 def sage_forward(params, feats, batch, cfg: GCNConfig, *,
@@ -230,16 +250,20 @@ def sage_forward(params, feats, batch, cfg: GCNConfig, *,
              (batch["nbrs2"], batch["mask2"])),
             mesh=mesh, dataflow=cfg.dataflow, impl=cfg.impl,
             request_chunk=cfg.request_chunk, scheduled=cfg.scheduled,
-            wire=cfg.wire)
+            wire=cfg.wire, features=cfg.features,
+            sparse_capacity=cfg.sparse_capacity)
     else:
         x_self = lookup_rows(feats, flat1, mesh=mesh, dataflow=cfg.dataflow,
                              impl=cfg.impl, request_chunk=cfg.request_chunk,
-                             scheduled=cfg.scheduled, wire=cfg.wire)
+                             scheduled=cfg.scheduled, wire=cfg.wire,
+                             features=cfg.features,
+                             sparse_capacity=cfg.sparse_capacity)
         x_agg = cgtrans.aggregate_sampled(
             feats, batch["nbrs2"], batch["mask2"], mesh=mesh,
             dataflow=cfg.dataflow, impl=cfg.impl,
             request_chunk=cfg.request_chunk, scheduled=cfg.scheduled,
-            wire=cfg.wire)
+            wire=cfg.wire, features=cfg.features,
+            sparse_capacity=cfg.sparse_capacity)
 
     h1 = jnp.concatenate([x_self, x_agg], axis=-1)
     h1 = jax.nn.relu(jnp.einsum("pbf,fh->pbh", h1, params["w0"]) + params["b0"])

@@ -150,26 +150,42 @@ def _gas_cmp_kernel(occ_ref, dst_ref, val_ref, out_ref, *, op: str,
 # revisiting contract); ``init`` marks the first visit of each row block
 # (empty blocks get one init-only step so every output row is defined).
 
-def _sched_add_kernel(wk_ref, dst_ref, val_ref, out_ref):
+def _sched_live(wk_ref, w, feat_skip: bool):
+    """Is this work item live for THIS feature block? Column 2 is the edge
+    schedule's tile liveness; with ``feat_skip`` the work row additionally
+    carries one occupancy flag per feature block (columns 4…4+nfb — the
+    compressed-sparse metadata riding the same scalar-prefetch list), so an
+    all-zero value block skips its round exactly like an idle tile.
+    Skipping is exact for add: a zero block contributes the additive
+    identity (and ``x + (-0.0) ≡ x``, so signed zeros can't leak)."""
+    live = wk_ref[w, 2] == 1
+    if feat_skip:
+        live = jnp.logical_and(live, wk_ref[w, 4 + pl.program_id(0)] == 1)
+    return live
+
+
+def _sched_add_kernel(wk_ref, dst_ref, val_ref, out_ref, *,
+                      feat_skip: bool = False):
     w = pl.program_id(1)
 
     @pl.when(wk_ref[w, 3] == 1)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    @pl.when(wk_ref[w, 2] == 1)
+    @pl.when(_sched_live(wk_ref, w, feat_skip))
     def _round():
         _add_round(dst_ref[...] - wk_ref[w, 0] * ROW_BLOCK, val_ref, out_ref)
 
 
-def _sched_addw_kernel(wk_ref, dst_ref, w_ref, val_ref, out_ref):
+def _sched_addw_kernel(wk_ref, dst_ref, w_ref, val_ref, out_ref, *,
+                       feat_skip: bool = False):
     w = pl.program_id(1)
 
     @pl.when(wk_ref[w, 3] == 1)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    @pl.when(wk_ref[w, 2] == 1)
+    @pl.when(_sched_live(wk_ref, w, feat_skip))
     def _round():
         _add_round(dst_ref[...] - wk_ref[w, 0] * ROW_BLOCK, val_ref, out_ref,
                    w=w_ref[...])
@@ -200,21 +216,29 @@ def gas_scatter_banded(work: jax.Array, dst: jax.Array, values: jax.Array,
 
     work: (W, 4) int32 scalar-prefetch rows [row_block, tile, live, init],
     ordered by row_block (see ``ops.schedule_edges``); dst/values/weights as
-    in ``gas_scatter_pallas`` and already destination-binned.
+    in ``gas_scatter_pallas`` and already destination-binned. An add-op
+    work list may carry ``F // fb`` extra columns of per-(tile, feature
+    block) value occupancy (``ops`` derives them from the value stream) —
+    the kernel then skips all-zero feature blocks the way it skips idle
+    tiles, so scheduled rounds track the values' ACTUAL nonzero blocks.
     """
     E, F = values.shape
     et = edge_tile(op, interpret)
     fb = F if interpret else FEAT_BLOCK
     assert E % et == 0 and F % fb == 0 and n_rows % ROW_BLOCK == 0
     grid = (F // fb, work.shape[0])
+    feat_skip = work.shape[1] > 4
+    assert work.shape[1] in (4, 4 + F // fb), work.shape
 
     in_specs = [pl.BlockSpec((et,), lambda f, w, wk: (wk[w, 1],))]   # dst
     operands = [dst]
     if op == "add":
         if weights is None:
-            kernel = _sched_add_kernel
+            kernel = functools.partial(_sched_add_kernel,
+                                       feat_skip=feat_skip)
         else:
-            kernel = _sched_addw_kernel
+            kernel = functools.partial(_sched_addw_kernel,
+                                       feat_skip=feat_skip)
             in_specs.append(pl.BlockSpec((et,), lambda f, w, wk: (wk[w, 1],)))
             operands.append(weights)
     else:

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core import cgtrans, gas
+from repro.core import sparse as sparsefmt
 from repro.graph.partition import islandize
 from repro.graph.sampling import host_sample_csr
 from repro.graph.structure import COOGraph
@@ -114,6 +115,7 @@ class ServingEngine:
         clock: Callable[[], float] = time.monotonic,
         sample_seed: int = 0,
         wire: str = "f32",
+        features: str = "dense",
         partition: str = "interval",
     ):
         # serve whatever float dtype the table arrives in (bf16 tables are
@@ -169,7 +171,15 @@ class ServingEngine:
         self.dataflow = dataflow
         self.impl = impl
         self.scheduled = scheduled
-        self.wire = cgtrans._check_wire(wire, dataflow)
+        self.wire = cgtrans._check_wire(wire, dataflow, features)
+        self.features = sparsefmt.validate_features(features)
+        # measured once per table at engine build (the edge-schedule
+        # economics), AFTER any islandization reshuffle — a relabel can't
+        # change the worst row, but measuring the concrete table keeps the
+        # invariant local
+        self.sparse_capacity = (
+            sparsefmt.table_capacity(np.asarray(self.feats))
+            if features == "sparse" else None)
         self.fuse = fuse
         self.sample_seed = int(sample_seed)
         self.clock = clock
@@ -301,7 +311,8 @@ class ServingEngine:
         return cgtrans.aggregate_multi(
             self.feats, blocks, mesh=self.mesh, dataflow=self.dataflow,
             op=self.op, impl=self.impl, scheduled=self.scheduled,
-            wire=self.wire)
+            wire=self.wire, features=self.features,
+            sparse_capacity=self.sparse_capacity)
 
     def fetch_callable(self, reqs: Optional[List[ServeRequest]] = None):
         """(fn, args) of the exact fused fetch a drain of ``reqs`` (default:
@@ -317,7 +328,8 @@ class ServingEngine:
             return cgtrans.aggregate_multi(
                 feats, blocks_, mesh=self.mesh, dataflow=self.dataflow,
                 op=self.op, impl=self.impl, scheduled=self.scheduled,
-                wire=self.wire)
+                wire=self.wire, features=self.features,
+                sparse_capacity=self.sparse_capacity)
         return fn, (self.feats, tuple(blocks))
 
     def _dispatch(self, reqs: List[ServeRequest]) -> None:

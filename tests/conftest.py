@@ -53,6 +53,17 @@ def island_parity_report():
 
 
 @pytest.fixture(scope="session")
+def sparse_parity_report():
+    """The compressed-sparse feature matrix on the real 8-way mesh (sparse ≡
+    dense bit-exact values AND gradients on integer data across dataflow ×
+    impl × op, the multi/edges entrypoints, the bf16-wire composition,
+    unchanged collective counts, and the serving engine on sparse features)
+    — run ONCE per session; tests/test_sparse.py asserts each cell against
+    this shared stdout."""
+    return run_distributed_case("sparse_parity", timeout=900)
+
+
+@pytest.fixture(scope="session")
 def grad_parity_report():
     """The GRADIENT differential matrix on the real 8-way mesh (plus the
     3-step pallas-vs-xla train parity) — run ONCE per session (each cell is

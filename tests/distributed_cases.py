@@ -1036,6 +1036,205 @@ def case_islandized_parity():
     print("islandized parity ok")
 
 
+def case_sparse_parity():
+    """The compressed-sparse feature matrix on a REAL 8-way mesh
+    (repro.core.sparse):
+
+    * sparse ≡ dense BIT-EXACT — values and gradients — on integer-valued
+      ~10%-dense features, across sampled × add/max/min × cgtrans/baseline
+      × xla/pallas, plus the multi and edges entrypoints;
+    * the capacity gate: a capacity that can't beat dense falls back to the
+      unchanged dense path (still bit-exact);
+    * sparse composes with the bf16 wire (baseline raw-row shipment packs
+      quantized nonzeros + bitmap) — still exact on small integers;
+    * collective counts: the format changes BYTES, never counts;
+    * the serving engine on sparse features ≡ the dense engine bit for bit.
+
+    Prints one ``sparse … ok`` line per cell; tests/test_sparse.py parses
+    them.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import cgtrans
+    from repro.core import sparse as sparsefmt
+    from repro.graph import partition_by_src, uniform_graph, host_sample
+    from repro.launch.jaxpr_stats import collective_counts
+    from repro.launch.mesh import make_data_mesh
+
+    mesh = make_data_mesh(8)
+    rng = np.random.default_rng(0)
+    g = uniform_graph(256, 1000, seed=1, n_features=16, weights=True)
+    pg = partition_by_src(g, 8)
+    # integer-valued features at ~10% density: round to ints (bit-exact
+    # addition in any order), then zero most entries so the measured
+    # table_capacity clears the sparse_fits gate
+    fdense = np.round(np.asarray(pg.features) * 5.0).astype(np.float32)
+    keep = rng.random(fdense.shape) < 0.1
+    feats = jnp.asarray(np.where(keep, np.where(fdense == 0, 1.0, fdense), 0.0))
+    cap = sparsefmt.table_capacity(np.asarray(feats))
+    F = feats.shape[-1]
+    assert sparsefmt.sparse_fits(cap, F), (cap, F)
+    mask = np.asarray(pg.mask).copy()
+    mask[3] = False                                        # all-padded shard
+    mask = jnp.asarray(mask)
+    eargs = (jnp.asarray(pg.src), jnp.asarray(pg.dst),
+             jnp.ones_like(jnp.asarray(pg.weights)), mask)
+
+    seeds = rng.integers(0, 256, 64).astype(np.int32)
+    nbrs, smask = host_sample(g, seeds, 10, seed=2)
+    nb = jnp.asarray(nbrs.reshape(8, 8, 10))
+    mk = np.asarray(smask.reshape(8, 8, 10)).copy()
+    mk[5] = False                                          # all-padded shard
+    mk = jnp.asarray(mk)
+
+    def exact(a, b, tag):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(tag))
+
+    # -- sparse ≡ dense values: sampled × flow × op × impl ------------------
+    for flow in ("cgtrans", "baseline"):
+        for op in ("add", "max", "min"):
+            for impl in ("xla", "pallas"):
+                outs = {}
+                for feat_mode, c in (("dense", None), ("sparse", cap)):
+                    outs[feat_mode] = jax.jit(
+                        lambda f, fl=flow, o=op, i=impl, fm=feat_mode, cc=c:
+                        cgtrans.aggregate_sampled(
+                            f, nb, mk, mesh=mesh, dataflow=fl, op=o, impl=i,
+                            features=fm, sparse_capacity=cc))(feats)
+                exact(outs["sparse"], outs["dense"],
+                      ("sampled", flow, op, impl))
+                print(f"sparse path=sampled flow={flow} op={op} impl={impl} "
+                      "exact ok")
+
+    # -- sparse ≡ dense values: edges × flow × op ---------------------------
+    for flow in ("cgtrans", "baseline"):
+        for op in ("add", "max", "min"):
+            outs = {}
+            for feat_mode, c in (("dense", None), ("sparse", cap)):
+                outs[feat_mode] = jax.jit(
+                    lambda f, fl=flow, o=op, fm=feat_mode, cc=c:
+                    cgtrans.aggregate_edges(
+                        f, *eargs, mesh=mesh, dataflow=fl, op=o,
+                        features=fm, sparse_capacity=cc))(feats)
+            exact(outs["sparse"], outs["dense"], ("edges", flow, op))
+            print(f"sparse path=edges flow={flow} op={op} exact ok")
+
+    # -- sparse ≡ dense: the coalesced command block ------------------------
+    nb1 = jnp.asarray(rng.integers(0, 256, (8, 6, 1)).astype(np.int32))
+    mk1 = jnp.ones((8, 6, 1), bool)
+    for flow in ("cgtrans", "baseline"):
+        for impl in ("xla", "pallas"):
+            outs = {}
+            for feat_mode, c in (("dense", None), ("sparse", cap)):
+                outs[feat_mode] = jax.jit(
+                    lambda f, fl=flow, i=impl, fm=feat_mode, cc=c:
+                    cgtrans.aggregate_multi(
+                        f, ((nb1, mk1), (nb, mk)), mesh=mesh, dataflow=fl,
+                        impl=i, features=fm, sparse_capacity=cc))(feats)
+            exact(outs["sparse"][0], outs["dense"][0],
+                  ("multi seg1", flow, impl))
+            exact(outs["sparse"][1], outs["dense"][1],
+                  ("multi seg2", flow, impl))
+            print(f"sparse path=multi flow={flow} impl={impl} exact ok")
+
+    # -- sparse ≡ dense GRADIENTS -------------------------------------------
+    # dyadic setup (the wire-parity recipe): all-valid masks + K=4 keep the
+    # mean divisions exact; integer cotangents keep every sum bit-exact
+    nb4 = jnp.asarray(rng.integers(0, 256, (8, 8, 4)).astype(np.int32))
+    mk4 = jnp.ones((8, 8, 4), bool)
+    u = jnp.asarray(rng.integers(-4, 5, (8, 8, 16)).astype(np.float32))
+
+    def sloss(f, flow, impl, feat_mode, c):
+        out = cgtrans.aggregate_sampled(
+            f, nb4, mk4, mesh=mesh, dataflow=flow, impl=impl,
+            features=feat_mode, sparse_capacity=c)
+        return jnp.sum(out * u)
+
+    sgrad = jax.jit(jax.grad(sloss), static_argnums=(1, 2, 3, 4))
+    for flow in ("cgtrans", "baseline"):
+        for impl in ("xla", "pallas"):
+            exact(sgrad(feats, flow, impl, "sparse", cap),
+                  sgrad(feats, flow, impl, "dense", None),
+                  ("sampled grad", flow, impl))
+            print(f"sparse grad path=sampled flow={flow} impl={impl} "
+                  "exact ok")
+
+    def eloss(f, feat_mode, c):
+        out = cgtrans.aggregate_edges(
+            f, *eargs, mesh=mesh, op="add", features=feat_mode,
+            sparse_capacity=c)
+        return jnp.sum(out * jnp.asarray(
+            rng2.integers(-4, 5, out.shape).astype(np.float32)))
+
+    rng2 = np.random.default_rng(9)
+    ge_s = jax.jit(jax.grad(eloss), static_argnums=(1, 2))(feats, "sparse", cap)
+    rng2 = np.random.default_rng(9)
+    ge_d = jax.jit(jax.grad(eloss), static_argnums=(1, 2))(feats, "dense", None)
+    exact(ge_s, ge_d, ("edges grad",))
+    print("sparse grad path=edges exact ok")
+
+    # -- the capacity gate: no-win capacity ships dense unchanged -----------
+    out_gate = jax.jit(lambda f: cgtrans.aggregate_sampled(
+        f, nb, mk, mesh=mesh, features="sparse",
+        sparse_capacity=F))(feats)   # F + bitmap ≥ F → gate fails
+    out_ref = jax.jit(lambda f: cgtrans.aggregate_sampled(
+        f, nb, mk, mesh=mesh))(feats)
+    exact(out_gate, out_ref, ("gate fallback",))
+    print("sparse gate-fallback dense ok")
+
+    # -- sparse × bf16 wire: the baseline raw-row shipment ------------------
+    # (baseline + narrow wire is ONLY legal with sparse features — the
+    # packed nonzeros quantize like partials; integer values ≤ 5 keep the
+    # bf16 leg lossless, so the composition is still exact)
+    for flow in ("cgtrans", "baseline"):
+        out_w = jax.jit(lambda f, fl=flow: cgtrans.aggregate_sampled(
+            f, nb, mk, mesh=mesh, dataflow=fl, wire="bf16",
+            features="sparse", sparse_capacity=cap))(feats)
+        out_d = jax.jit(lambda f, fl=flow: cgtrans.aggregate_sampled(
+            f, nb, mk, mesh=mesh, dataflow=fl))(feats)
+        exact(out_w, out_d, ("bf16 wire", flow))
+        print(f"sparse wire=bf16 flow={flow} exact ok")
+
+    # -- counts: the format changes bytes, never counts ---------------------
+    for flow in ("cgtrans", "baseline"):
+        cs = collective_counts(lambda f, fl=flow: cgtrans.aggregate_sampled(
+            f, nb, mk, mesh=mesh, dataflow=fl, features="sparse",
+            sparse_capacity=cap), feats)
+        cd = collective_counts(lambda f, fl=flow: cgtrans.aggregate_sampled(
+            f, nb, mk, mesh=mesh, dataflow=fl), feats)
+        assert dict(cs) == dict(cd), (flow, dict(cs), dict(cd))
+    print("sparse collective counts ok")
+
+    # -- the serving engine on sparse features ------------------------------
+    from repro.serving import ServingEngine
+    V = 256
+    sfeats = np.asarray(feats).reshape(V, F)
+    indptr, indices, _ = g.to_csr()
+    res = {}
+    sseeds = rng.integers(0, V, 8)
+    for feat_mode in ("dense", "sparse"):
+        eng = ServingEngine(sfeats, indptr, indices, mesh=mesh, fanout=4,
+                            features=feat_mode, max_batch=8)
+        rids = [eng.submit([int(s)]) for s in sseeds]
+        assert eng.poll() == 8
+        res[feat_mode] = [eng.result(r) for r in rids]
+    assert res_cap_fits(sfeats)
+    for a, b in zip(res["sparse"], res["dense"]):
+        exact(a.self_rows, b.self_rows, ("serving self",))
+        exact(a.agg_rows, b.agg_rows, ("serving agg",))
+    print("sparse serving exact ok")
+    print("sparse parity ok")
+
+
+def res_cap_fits(sfeats):
+    """The serving cell only demonstrates compression if the measured
+    capacity actually clears the gate on this table."""
+    from repro.core import sparse as sparsefmt
+    return sparsefmt.sparse_fits(sparsefmt.table_capacity(sfeats),
+                                 sfeats.shape[-1])
+
+
 CASES = {n[len("case_"):]: f for n, f in list(globals().items())
          if n.startswith("case_")}
 

@@ -316,6 +316,15 @@ def _expected_contract_grid():
                  f"aggregate_edges/cgtrans/add/xla/{w}"}
     grid |= {"aggregate_multi/cgtrans/pallas/bf16",
              "serving_fetch/fused/xla/bf16"}
+    # compressed-sparse feature variants (repro.core.sparse): bytes change,
+    # budgets don't — dense twins' numbers, plus the baseline × bf16-wire
+    # composition that only sparse features legalize
+    grid |= {"aggregate_sampled/cgtrans/xla/sparse",
+             "aggregate_sampled/cgtrans/pallas/sparse",
+             "aggregate_sampled/baseline/xla/sparse",
+             "aggregate_multi/cgtrans/xla/sparse",
+             "aggregate_edges/cgtrans/add/xla/sparse",
+             "aggregate_sampled/baseline/xla/sparse-bf16"}
     return grid
 
 
@@ -368,7 +377,7 @@ def test_sage_tables_agree_with_sage_contracts():
 def test_lint_cli_reports_ok_on_head():
     """The CI gate end-to-end: scripts/lint.py --json exits 0 on HEAD with
     a clean AST report. Contract verification is restricted to one cheap
-    entrypoint here — ci.sh --tier lint runs the full 51 separately."""
+    entrypoint here — ci.sh --tier lint runs the full 57 separately."""
     proc = subprocess.run(
         [sys.executable, str(REPO / "scripts" / "lint.py"), "--json",
          "--contracts", "embed_lookup/baseline/xla"],

@@ -1,0 +1,83 @@
+"""The bench-drift gate (``scripts/check_bench_drift.py``).
+
+CI's bench-smoke lane regenerates the collective-bytes JSON on every push
+and diffs the counter/ratio rows against the committed
+``BENCH_collective_bytes.json``. These tests drive the script the way the
+workflow does — as a subprocess, asserting on its exit code — so the gate
+itself is covered: the committed file must agree with itself, and a
+planted one-byte counter edit must fail the run and be named in the
+report.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SCRIPT = REPO / "scripts" / "check_bench_drift.py"
+COMMITTED = REPO / "BENCH_collective_bytes.json"
+sys.path.insert(0, str(REPO / "scripts"))
+
+pytestmark = pytest.mark.sparse
+
+
+def run_drift(fresh, committed):
+    return subprocess.run(
+        [sys.executable, str(SCRIPT), str(fresh), str(committed)],
+        capture_output=True, text=True)
+
+
+def test_committed_file_agrees_with_itself():
+    res = run_drift(COMMITTED, COMMITTED)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "No drift" in res.stdout
+
+
+def test_planted_counter_edit_fails_and_is_named(tmp_path):
+    doc = json.loads(COMMITTED.read_text())
+    # plant a +1 on the first counted byte field of a non-timing row —
+    # the smallest drift the gate must catch
+    from check_bench_drift import TIMING_MODES  # scripts/ on sys.path above
+    row = next(r for r in doc["rows"]
+               if r["mode"] not in TIMING_MODES and "bytes" in r)
+    row["bytes"] += 1
+    edited = tmp_path / "edited.json"
+    edited.write_text(json.dumps(doc))
+    res = run_drift(edited, COMMITTED)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "DRIFT" in res.stdout
+    # the report names the drifted field with both values
+    assert "bytes" in res.stdout
+    assert str(row["bytes"]) in res.stdout
+    assert str(row["bytes"] - 1) in res.stdout
+
+
+def test_timing_fields_never_drift(tmp_path):
+    doc = json.loads(COMMITTED.read_text())
+    for r in doc["rows"]:
+        for k in ("us", "us_per_shard", "loss"):
+            if k in r:
+                r[k] = r[k] * 3 + 1
+    edited = tmp_path / "timing.json"
+    edited.write_text(json.dumps(doc))
+    res = run_drift(edited, COMMITTED)
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_missing_rows_are_informational(tmp_path):
+    doc = json.loads(COMMITTED.read_text())
+    doc["rows"] = doc["rows"][: len(doc["rows"]) // 2]
+    subset = tmp_path / "subset.json"
+    subset.write_text(json.dumps(doc))
+    res = run_drift(subset, COMMITTED)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "only in committed file" in res.stdout
+
+
+def test_usage_error_is_distinct():
+    res = subprocess.run([sys.executable, str(SCRIPT)],
+                         capture_output=True, text=True)
+    assert res.returncode == 2

@@ -1,0 +1,307 @@
+"""Compressed-sparse features (``repro.core.sparse``): codec properties on
+the host, the kernel-level feature-block skip, and the parity matrix on the
+real 8-way mesh.
+
+Layer 1 (runs everywhere, 1 device): the codec is a PURE transform, so its
+contracts are property-testable without a mesh — encode/decode round-trips
+bit-for-bit at any density (all-zero rows and density 1.0 included) while
+the row fits the capacity, the bitmap popcount equals the packed length
+the decode consumes, the ``sparse_fits`` gate falls back to the unchanged
+dense path, and the fused kernel's feature-block skip is bit-exact while
+executing strictly fewer rounds on zero-heavy values.
+
+Layer 2 (``@pytest.mark.distributed``): one subprocess run of
+``distributed_cases.case_sparse_parity`` on 8 fake devices; each test here
+asserts one printed cell — same pattern as the pallas/wire/partition tiers.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _propcheck import given, settings, strategies as st
+from repro.core import cgtrans, sparse
+from repro.kernels.gas_scatter import kernel as K
+from repro.kernels.gas_scatter import ops
+
+pytestmark = pytest.mark.sparse
+
+
+# ---------------------------------------------------------------------------
+# 1. codec properties (host-level, no mesh)
+# ---------------------------------------------------------------------------
+
+def test_validate_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown features mode"):
+        sparse.validate_features("blocky")
+    for m in sparse.FEATURE_MODES:
+        assert sparse.validate_features(m) == m
+
+
+def test_alignment_mirrors_the_kernel_tile():
+    """The packed width aligns to the SAME tile the fused kernel blocks
+    features by — asserted so the two constants can never drift apart."""
+    assert sparse.FEAT_ALIGN == K.FEAT_BLOCK
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-100.0, 100.0), min_size=1, max_size=48),
+       st.integers(0, 10**6), st.integers(0, 10))
+def test_roundtrip_exact_at_measured_capacity(vals, seed, tenths):
+    """encode→decode is bit-for-bit at ANY density — the rng thins the row
+    to ``tenths/10`` density (0 = all-zero rows, 10 = fully dense) and the
+    capacity is the measured ``table_capacity``, the entrypoints' choice."""
+    rng = np.random.default_rng(seed)
+    x = np.asarray(vals, np.float32)[None]
+    x = np.where(rng.random(x.shape) < tenths / 10.0, x, 0.0)
+    cap = sparse.table_capacity(x)
+    packed, bitmap = sparse.encode_rows(jnp.asarray(x), cap)
+    out = sparse.decode_rows(packed, bitmap, x.shape[-1])
+    np.testing.assert_array_equal(np.asarray(out), x)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-100.0, 100.0), min_size=1, max_size=48),
+       st.integers(0, 10**6))
+def test_popcount_equals_packed_length(vals, seed):
+    """bitmap popcount ≡ the row's nonzero count ≡ the number of packed
+    entries the decode consumes — the codec's internal consistency claim."""
+    rng = np.random.default_rng(seed)
+    x = np.asarray(vals, np.float32)[None]
+    x = np.where(rng.random(x.shape) < 0.3, x, 0.0)
+    cap = sparse.table_capacity(x)
+    packed, bitmap = sparse.encode_rows(jnp.asarray(x), cap)
+    nnz = int((x != 0).sum())
+    assert int(sparse.popcount(bitmap)[0]) == nnz
+    # the packed row holds exactly nnz leading values (zeros after)
+    p = np.asarray(packed)[0]
+    assert (p[nnz:] == 0).all()
+
+
+def test_roundtrip_exact_at_density_one():
+    x = np.arange(1, 257, dtype=np.float32).reshape(2, 128)
+    cap = sparse.table_capacity(x)
+    assert cap == 128 and not sparse.sparse_fits(cap, 128)
+    packed, bitmap = sparse.encode_rows(jnp.asarray(x), cap)
+    np.testing.assert_array_equal(
+        np.asarray(sparse.decode_rows(packed, bitmap, 128)), x)
+
+
+def test_encode_truncates_beyond_capacity_positionally():
+    """Over-capacity rows lose their TRAILING nonzeros — the failure mode
+    the static gate exists to rule out, pinned so it stays predictable."""
+    x = jnp.asarray([[1.0, 2.0, 3.0, 4.0]])
+    packed, bitmap = sparse.encode_rows(x, 2)
+    np.testing.assert_array_equal(np.asarray(packed), [[1.0, 2.0]])
+    out = np.asarray(sparse.decode_rows(packed, bitmap, 4))
+    np.testing.assert_array_equal(out, [[1.0, 2.0, 0.0, 0.0]])
+
+
+def test_fit_gate_boundary():
+    """capacity + bitmap words must be strictly under F to win."""
+    F = 64                      # 2 bitmap words
+    assert sparse.sparse_fits(56, F)          # 56 + 2 < 64
+    assert not sparse.sparse_fits(62, F)      # 62 + 2 = 64
+    assert not sparse.sparse_fits(F, F)
+
+
+def test_capacity_helpers_align_and_cap():
+    assert sparse.bitmap_words(64) == 2 and sparse.bitmap_words(65) == 3
+    assert sparse.worst_case_capacity(512, 0.1) == 128   # FEAT_ALIGN granule
+    assert sparse.worst_case_capacity(512, 1.0) == 512
+    assert sparse.worst_case_capacity(40, 0.1) == 8      # NARROW_ALIGN
+    x = np.zeros((4, 256), np.float32)
+    x[0, :5] = 1.0
+    assert sparse.table_capacity(x) == 128               # 5 → one tile
+    assert sparse.table_capacity(np.zeros((2, 16))) == 8  # all-zero: min align
+
+
+def test_density_stats_measures():
+    s = sparse.density_stats(np.asarray([[1.0, 0.0, 0.0, 2.0]]))
+    assert s == {"nnz": 2, "total": 4, "density": 0.5}
+
+
+# ---------------------------------------------------------------------------
+# 2. entrypoint plumbing (host-level, unsharded)
+# ---------------------------------------------------------------------------
+
+def _tiny_sampled(features, capacity, dataflow="cgtrans", impl="xla"):
+    rng = np.random.default_rng(0)
+    f = np.round(rng.standard_normal((1, 16, 8)) * 5.0).astype(np.float32)
+    f[rng.random(f.shape) > 0.3] = 0.0
+    feats = jnp.asarray(f)
+    nbrs = jnp.asarray(rng.integers(0, 16, (1, 4, 3)).astype(np.int32))
+    mask = jnp.ones((1, 4, 3), bool)
+    return cgtrans.aggregate_sampled(feats, nbrs, mask, mesh=None,
+                                     dataflow=dataflow, impl=impl,
+                                     features=features,
+                                     sparse_capacity=capacity)
+
+
+def test_entrypoints_reject_unknown_features():
+    with pytest.raises(ValueError, match="unknown features mode"):
+        _tiny_sampled("blocky", None)
+
+
+def test_sparse_requires_a_capacity():
+    with pytest.raises(ValueError, match="table_capacity"):
+        _tiny_sampled("sparse", None)
+    with pytest.raises(ValueError, match="capacity"):
+        _tiny_sampled("sparse", 0)
+
+
+def test_dense_rejects_a_stray_capacity():
+    with pytest.raises(ValueError, match="only applies"):
+        _tiny_sampled("dense", 4)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_unsharded_sparse_equals_dense_bitexact(impl):
+    ref = np.asarray(_tiny_sampled("dense", None, impl=impl))
+    out = np.asarray(_tiny_sampled("sparse", 4, impl=impl))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_gate_fallback_ships_dense_unchanged():
+    """A capacity that can't beat dense (capacity + bitmap ≥ F) must take
+    the EXACT dense path — same jaxpr-level computation, not a sparse
+    round-trip that happens to agree."""
+    ref = np.asarray(_tiny_sampled("dense", None))
+    out = np.asarray(_tiny_sampled("sparse", 8))     # 8 + 1 ≥ 8 → fallback
+    np.testing.assert_array_equal(out, ref)
+    assert cgtrans._resolve_sparse("sparse", 8, 8) is None
+    assert cgtrans._resolve_sparse("sparse", 4, 8) == 4
+
+
+def test_unsharded_sparse_grads_equal_dense():
+    rng = np.random.default_rng(1)
+    f = np.round(rng.standard_normal((1, 16, 8)) * 5.0).astype(np.float32)
+    f[rng.random(f.shape) > 0.3] = 0.0
+    feats = jnp.asarray(f)
+    nbrs = jnp.asarray(rng.integers(0, 16, (1, 4, 4)).astype(np.int32))
+    mask = jnp.ones((1, 4, 4), bool)
+    u = jnp.asarray(rng.integers(-4, 5, (1, 4, 8)).astype(np.float32))
+
+    def loss(x, impl, features, cap):
+        out = cgtrans.aggregate_sampled(x, nbrs, mask, mesh=None, impl=impl,
+                                        features=features,
+                                        sparse_capacity=cap)
+        return jnp.sum(out * u)
+
+    for impl in ("xla", "pallas"):
+        gs = jax.grad(loss)(feats, impl, "sparse", 4)
+        gd = jax.grad(loss)(feats, impl, "dense", None)
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(gd),
+                                      err_msg=impl)
+
+
+# ---------------------------------------------------------------------------
+# 3. the kernel feature-block skip
+# ---------------------------------------------------------------------------
+
+def _zero_heavy_stream(seed=3):
+    """A binned edge stream whose first half has all-zero values — in
+    interpret mode the feature block spans the full padded width, so whole
+    TILES must be value-dead for the skip to fire."""
+    rng = np.random.default_rng(seed)
+    E, F, R = 512, 24, 96
+    dst = rng.integers(0, R, E).astype(np.int32)
+    order = np.argsort(dst // K.ROW_BLOCK, kind="stable")
+    vals = np.round(rng.standard_normal((E, F)) * 4.0).astype(np.float32)
+    d, v = dst[order], vals[order].copy()
+    v[: E // 2] = 0.0
+    sched = ops.schedule_edges(jnp.asarray(d), None, R, assume_sorted=True)
+    return jnp.asarray(d), jnp.asarray(v), R, sched
+
+
+def test_feat_skip_stats_counts_fewer_rounds():
+    _, v, _, sched = _zero_heavy_stream()
+    live, band = ops.feat_skip_stats(sched, v)
+    assert 0 < live < band, (live, band)
+    # dense values: every banded round stays live
+    live_d, band_d = ops.feat_skip_stats(sched, jnp.ones_like(v))
+    assert live_d == band_d
+
+
+def test_feat_skip_dispatch_is_bitexact():
+    d, v, R, sched = _zero_heavy_stream()
+    out = ops.gas_scatter_fused(d, v, None, None, R, op="add",
+                                schedule=sched)
+    ref = ops.gas_scatter_ref(d, v, R, op="add")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_feat_skip_work_rows_widen_only_for_add():
+    """The work list carries the liveness columns exactly when the op can
+    skip (add — zero is its identity); cmp ops keep the 4-wide rows."""
+    d, v, R, sched = _zero_heavy_stream()
+    assert sched.work.shape[1] == 4
+    fill = jnp.where(v == 0, -jnp.inf, v)
+    out = ops.gas_scatter_fused(d, fill, None, None, R, op="max",
+                                schedule=sched)
+    ref = ops.gas_scatter_ref(d, fill, R, op="max")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# 4. the on-mesh matrix: every cell of the shared 8-way subprocess run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("flow", ["cgtrans", "baseline"])
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_mesh_sparse_sampled_bitexact(sparse_parity_report, flow, op, impl):
+    line = f"sparse path=sampled flow={flow} op={op} impl={impl} exact ok"
+    assert line in sparse_parity_report, f"missing/failed cell: {line!r}"
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("flow", ["cgtrans", "baseline"])
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+def test_mesh_sparse_edges_bitexact(sparse_parity_report, flow, op):
+    line = f"sparse path=edges flow={flow} op={op} exact ok"
+    assert line in sparse_parity_report, f"missing/failed cell: {line!r}"
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("flow", ["cgtrans", "baseline"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_mesh_sparse_multi_bitexact(sparse_parity_report, flow, impl):
+    line = f"sparse path=multi flow={flow} impl={impl} exact ok"
+    assert line in sparse_parity_report, f"missing/failed cell: {line!r}"
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("flow", ["cgtrans", "baseline"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_mesh_sparse_grads_bitexact(sparse_parity_report, flow, impl):
+    """The headline: the sparse gather's custom VJP and the sparse-shipment
+    VJP reproduce the dense gradients bit for bit on integer data."""
+    line = f"sparse grad path=sampled flow={flow} impl={impl} exact ok"
+    assert line in sparse_parity_report, f"missing/failed cell: {line!r}"
+    assert "sparse grad path=edges exact ok" in sparse_parity_report
+
+
+@pytest.mark.distributed
+def test_mesh_gate_fallback(sparse_parity_report):
+    assert "sparse gate-fallback dense ok" in sparse_parity_report
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("flow", ["cgtrans", "baseline"])
+def test_mesh_sparse_composes_with_bf16_wire(sparse_parity_report, flow):
+    line = f"sparse wire=bf16 flow={flow} exact ok"
+    assert line in sparse_parity_report, f"missing/failed cell: {line!r}"
+
+
+@pytest.mark.distributed
+def test_mesh_sparse_changes_bytes_never_counts(sparse_parity_report):
+    assert "sparse collective counts ok" in sparse_parity_report
+
+
+@pytest.mark.distributed
+def test_mesh_serving_on_sparse_features(sparse_parity_report):
+    assert "sparse serving exact ok" in sparse_parity_report
